@@ -1,0 +1,60 @@
+"""Generalized-mode benchmarks: kNN / similarity throughput.
+
+Compares the paper's beat-form (16 lanes/beat + accumulator) against the
+TPU-native MXU form (DESIGN.md §2) and the Pallas kernel path: the ratio is
+the speedup "reusing the MXU" buys over lane-serial processing.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import euclidean_distance_sq, euclidean_scores
+from repro.core.knn import angular_scores, knn
+from repro.kernels.ops import euclidean_kernel
+
+
+def _t(f, *a, iters=5):
+    jax.block_until_ready(f(*a))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = f(*a)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run(rows):
+    rng = np.random.default_rng(0)
+    m, n, d = 512, 4096, 256
+    q = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+
+    mxu = jax.jit(euclidean_scores)
+    dt_mxu = _t(mxu, q, c)
+    rows.append(("euclid_mxu_form_512x4096x256", dt_mxu * 1e6,
+                 f"pair_dists_per_s={m * n / dt_mxu:.3e}"))
+
+    # beat form: one query row against the database per call (lane-serial)
+    beat = jax.jit(lambda qi, c: euclidean_distance_sq(
+        jnp.broadcast_to(qi, c.shape), c))
+    dt_beat = _t(beat, q[0], c)
+    rows.append(("euclid_beat_form_1x4096x256", dt_beat * 1e6,
+                 f"mxu_speedup_vs_beats={dt_beat * m / dt_mxu:.1f}x"))
+
+    kern = jax.jit(lambda q, c: euclidean_kernel(q, c))
+    dt_k = _t(kern, q, c)
+    rows.append(("euclid_pallas_kernel_512x4096x256", dt_k * 1e6,
+                 f"interpret_overhead_vs_mxu={dt_k / dt_mxu:.1f}x"))
+
+    ang = jax.jit(angular_scores)
+    dt_a = _t(ang, q, c)
+    rows.append(("angular_mxu_form_512x4096x256", dt_a * 1e6,
+                 f"pair_scores_per_s={m * n / dt_a:.3e}"))
+
+    top = jax.jit(lambda q, c: knn(q, c, 8, "euclidean"))
+    dt_knn = _t(top, q, c)
+    rows.append(("knn_top8_euclidean", dt_knn * 1e6,
+                 f"queries_per_s={m / dt_knn:.3e}"))

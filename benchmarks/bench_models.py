@@ -1,0 +1,41 @@
+"""Model-stack micro-benchmarks on CPU smoke configs: step time and
+tokens/s for a representative arch of each family (structure check — the
+real perf story is the roofline analysis on the production mesh)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.models import init_params
+from repro.optim import adamw
+from repro.parallel.ctx import NO_PARALLEL as ctx
+from repro.train import make_train_step
+
+ARCHS = ["smollm-360m", "jamba-1.5-large-398b", "rwkv6-7b",
+         "phi3.5-moe-42b-a6.6b", "deepseek-v3-671b"]
+
+
+def run(rows):
+    rng = np.random.default_rng(0)
+    for arch in ARCHS:
+        cfg = get_smoke(arch)
+        b, t = 4, 64
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, t)), jnp.int32)
+        batch = {"tokens": toks, "labels": toks}
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        opt = adamw.init(params)
+        ocfg = adamw.AdamWConfig()
+        step = jax.jit(make_train_step(cfg, ctx, ocfg))
+        params, opt, _ = step(params, opt, batch)  # compile
+        t0 = time.perf_counter()
+        iters = 5
+        for _ in range(iters):
+            params, opt, m = step(params, opt, batch)
+        jax.block_until_ready(m["loss"])
+        dt = (time.perf_counter() - t0) / iters
+        rows.append((f"smoke_train_step_{cfg.name}", dt * 1e6,
+                     f"tokens_per_s={b * t / dt:.3e}"))

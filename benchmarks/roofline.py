@@ -1,0 +1,483 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Roofline analysis: per (arch x shape x mesh) compute/memory/collective
+terms derived from compiled HLO on the production mesh.
+
+Methodology (and why — see DESIGN.md §Roofline-methodology):
+XLA's ``cost_analysis`` and the HLO text both count a ``while`` (lax.scan)
+body ONCE, so whole-program numbers undercount layer stacks and chunk
+loops.  This harness therefore lowers *exact-HLO* pieces and assembles:
+
+  decode cells  : the WHOLE decode step with layers python-unrolled
+                  (no while loops remain) — exact, direct.
+  prefill cells : per-segment single-pattern forward (layers x1, attention
+                  kv-loop and ssm/wkv chunk loops python-unrolled) x repeats
+                  + the head (embed / logits, unrolled loss chunks).
+  train cells   : per-segment pattern wrapped in jax.checkpoint and
+                  differentiated — the lowered HLO then contains forward +
+                  remat-recompute + backward, exactly like the production
+                  step — x repeats + differentiated head + optimizer sweep
+                  + the data-parallel gradient all-reduce (from the
+                  whole-program dry-run schedule, which lives outside any
+                  loop and is counted exactly there).
+
+Every number that enters the table is from ``compiled.cost_analysis()`` /
+``compiled.as_text()`` of an artifact lowered with the SAME sharding rules
+and mesh as the dry-run; the assembly multipliers (layer repeats) are
+static config facts.  MODEL_FLOPS = 6·N_act·D (train) / 2·N_act·D (fwd)
+gives the "useful fraction" column.
+
+Usage:
+  python -m benchmarks.roofline --arch rwkv6-7b --shape train_4k
+  python -m benchmarks.roofline --all --out experiments/roofline
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import SHAPES, applicable, get_config, input_specs  # noqa: E402
+from repro.configs.registry import ARCH_IDS  # noqa: E402
+from repro.launch import hlo_analysis as ha  # noqa: E402
+from repro.launch.dryrun import model_flops, params_shapes  # noqa: E402
+from repro.launch.mesh import make_plan, make_production_mesh  # noqa: E402
+from repro.models import derive_segments, count_params  # noqa: E402
+from repro.models import model as M  # noqa: E402
+from repro.models.layers import lm_loss, logits_apply, norm_apply  # noqa: E402
+from repro.models.transformer import block_apply, stack_cache_shapes  # noqa: E402
+from repro.parallel.sharding import make_rules  # noqa: E402
+
+
+def _cost_of(fn, args, in_shardings=None):
+    """(flops, hbm_bytes, link_bytes, collectives) of one compiled fn."""
+    jitted = jax.jit(fn) if in_shardings is None else jax.jit(
+        fn, in_shardings=in_shardings)
+    compiled = jitted.lower(*args).compile()
+    cost = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            ha.total_link_bytes(txt), ha.collective_summary(txt))
+
+
+def _merge(acc, cost, mult=1.0):
+    f, b, l, c = cost
+    acc["flops"] += f * mult
+    acc["hbm_bytes"] += b * mult
+    acc["link_bytes"] += l * mult
+    for k, v in c.items():
+        slot = acc["collectives"].setdefault(
+            k, {"count": 0, "result_bytes": 0, "link_bytes": 0.0})
+        slot["count"] += v["count"] * mult
+        slot["result_bytes"] += v["result_bytes"] * mult
+        slot["link_bytes"] += v["link_bytes"] * mult
+    return acc
+
+
+BF16_TRAFFIC_ADJ = 0.5  # see below
+
+
+def _cost_cfg(cfg):
+    """Costing variant: loops unrolled AND compute in f32.
+
+    f32 because the XLA *CPU* backend cannot execute bf16 dots: it wraps
+    every matmul in f32<->bf16 converts, which pollute ``bytes accessed``
+    (measured: 774 GB of converts on a 5 GB KV cache) and count as FLOPs.
+    Costing in f32 removes the pollution; matmul FLOPs are dtype-independent.
+    Production traffic on TPU is bf16 for activations/KV (0.5x f32) while
+    master weights stay f32 — so the memory/collective terms are reported
+    twice: raw f32 (upper bound) and x0.5 bf16-adjusted (lower bound, used
+    for the bottleneck call).  Both bounds go in the table.
+    """
+    return dataclasses.replace(cfg, scan_layers=False, scan_seq=False,
+                               attn_unroll=True, compute_dtype="float32")
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _h_spec(cfg, rules, b, t):
+    cd = jnp.dtype(cfg.compute_dtype)
+    h = _sds((b, t, cfg.d_model), cd)
+    sh = rules.batch({"h": h})["h"]
+    return h, sh
+
+
+def _seg_params_spec(cfg, rules, si):
+    full = params_shapes(cfg)
+    seg = full["segments"][si]
+    one = jax.tree.map(lambda x: _sds(x.shape[1:], x.dtype), seg)
+    full_sh = rules.params(full)["segments"][si]
+    one_sh = jax.tree.map(
+        lambda s: NamedSharding(s.mesh, P(*list(s.spec)[1:])), full_sh)
+    return one, one_sh
+
+
+def cost_cell(arch: str, shape_name: str, *, multi_pod=False,
+              plan_override=None, cfg_override=None) -> dict:
+    cfg = cfg_override or get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    plan = plan_override or make_plan(cfg, shape, multi_pod=multi_pod)
+    ctx = plan.ctx(mesh)
+    rules = make_rules(mesh, plan)
+    ccfg = _cost_cfg(cfg)
+    segs = derive_segments(cfg)
+
+    acc = {"flops": 0.0, "hbm_bytes": 0.0, "link_bytes": 0.0,
+           "collectives": {}}
+    b, t = shape.global_batch, shape.seq_len
+    t_text = t - cfg.vision_tokens if cfg.family == "vlm" else t
+
+    if shape.kind == "decode":
+        # whole decode step, layers unrolled: exact in one artifact
+        cache_s, tok_s = input_specs(ccfg, shape)
+        psh = rules.params(params_shapes(ccfg))
+        csh = rules.cache(cache_s)
+        tsh = rules.batch({"t": tok_s})["t"]
+
+        def fn(p, c, tk):
+            return M.decode_step(ccfg, ctx, p, c, tk)
+
+        cost = _cost_of(fn, (params_shapes(ccfg), cache_s, tok_s),
+                        (psh, csh, tsh))
+        _merge(acc, cost)
+    else:
+        grad_mode = shape.kind == "train"
+        # train runs `accum` microbatches per step: the per-layer body is
+        # costed at the MICRO batch and multiplied by repeats*accum, so the
+        # per-micro FSDP weight gathers (collectives) are counted each pass
+        accum = plan.accum_steps if grad_mode else 1
+        b = max(b // accum, 1)
+        pass_mult = accum
+        pos_s = _sds((b, t), jnp.int32)
+        h_s, h_sh = _h_spec(ccfg, rules, b, t)
+        pos_sh = rules.batch({"p": pos_s})["p"]
+        # enc-dec archs: decoder blocks cross-attend to the encoder memory
+        enc_s = enc_sh = None
+        if ccfg.encoder is not None:
+            enc_s, enc_sh = _h_spec(ccfg, rules, b, ccfg.encoder.seq_len)
+
+        def _seg_cost(cost_cfg, pattern, seg_one, seg_sh, h_s_, h_sh_,
+                      pos_s_, pos_sh_, enc=False):
+            def seg_fwd(p_list, h, positions, enc_h):
+                for spec, p_blk in zip(pattern, p_list):
+                    h, _, _ = block_apply(cost_cfg, ctx, spec, p_blk, h,
+                                          positions, "train", None, None,
+                                          enc_h)
+                return h
+
+            if grad_mode:
+                # remat='block': fwd + recompute + bwd, exactly the
+                # production schedule; remat='none' skips the recompute
+                inner = (jax.checkpoint(seg_fwd)
+                         if cost_cfg.remat == "block" else seg_fwd)
+
+                def seg_loss(p_list, h, positions, enc_h):
+                    return jnp.sum(inner(p_list, h, positions, enc_h)
+                                   .astype(jnp.float32) ** 2) * 1e-6
+
+                fn = jax.grad(seg_loss, argnums=(0, 1))
+            else:
+                fn = seg_fwd
+            return _cost_of(fn, (seg_one, h_s_, pos_s_, enc_s),
+                            (seg_sh, h_sh_, pos_sh_, enc_sh))
+
+        for si, (pattern, repeats) in enumerate(segs):
+            seg_one, seg_sh = _seg_params_spec(ccfg, rules, si)
+            cost = _seg_cost(ccfg, pattern, seg_one, seg_sh, h_s, h_sh,
+                             pos_s, pos_sh)
+            _merge(acc, cost, mult=repeats * pass_mult)
+
+        if ccfg.encoder is not None:
+            # encoder tower: uniform attn segments at (b, enc_seq)
+            from repro.models.model import encoder_cfg as _ecfg
+            ecfg = _ecfg(ccfg)
+            epos_s = _sds((b, ccfg.encoder.seq_len), jnp.int32)
+            epos_sh = rules.batch({"p": epos_s})["p"]
+            full = params_shapes(ccfg)
+            full_sh = rules.params(full)
+            for si, (pattern, repeats) in enumerate(derive_segments(ecfg)):
+                seg = full["encoder"]["segments"][si]
+                seg_one = jax.tree.map(
+                    lambda x: _sds(x.shape[1:], x.dtype), seg)
+                seg_sh = jax.tree.map(
+                    lambda s: NamedSharding(s.mesh, P(*list(s.spec)[1:])),
+                    full_sh["encoder"]["segments"][si])
+                cost = _seg_cost(ecfg, pattern, seg_one, seg_sh, enc_s,
+                                 enc_sh, epos_s, epos_sh)
+                _merge(acc, cost, mult=repeats * pass_mult)
+
+        # head: embed -> final norm -> loss (train) / last-token logits
+        full_p = params_shapes(ccfg)
+        head_p = {"embed": full_p["embed"], "final_norm": full_p["final_norm"]}
+        head_sh = {k: rules.params(full_p)[k] for k in head_p}
+        toks_s = _sds((b, t_text), jnp.int32)
+        lbl_s = _sds((b, t_text), jnp.int32)
+
+        if grad_mode:
+            def head_fn(hp, h, labels):
+                hn = norm_apply(ccfg, hp["final_norm"], h[:, :t_text])
+                loss, _ = lm_loss(ccfg, ctx, hp["embed"], hn, labels)
+                return loss
+
+            fn = jax.grad(head_fn, argnums=(0, 1))
+            cost = _cost_of(fn, (head_p, h_s, lbl_s),
+                            (head_sh, h_sh, rules.batch({"l": lbl_s})["l"]))
+            _merge(acc, cost, mult=pass_mult)
+            # embedding lookup fwd+bwd (vlm: plus the stub patch concat)
+            emb_batch = {"tokens": toks_s}
+            if ccfg.family == "vlm":
+                emb_batch["patches"] = _sds(
+                    (b, ccfg.vision_tokens, ccfg.d_model),
+                    jnp.dtype(ccfg.compute_dtype))
+
+            def emb_fn(hp, eb):
+                return jnp.sum(
+                    M._embed_inputs(ccfg, ctx, {"embed": hp["embed"]}, eb)[0]
+                    .astype(jnp.float32) ** 2)
+            cost = _cost_of(jax.grad(emb_fn), (head_p, emb_batch),
+                            (head_sh, rules.batch(emb_batch)))
+            _merge(acc, cost, mult=pass_mult)
+            # fwd+bwd done; train adds optimizer sweep + DP grad all-reduce
+            opt_cost, grad_ar_bytes = _optimizer_cost(cfg, rules, mesh, plan)
+            _merge(acc, opt_cost)
+            # grads all-reduce in f32 in production too: exempt from the
+            # bf16 adjustment
+            acc["link_bytes_exact_f32"] = grad_ar_bytes
+        else:
+            def head_fn(hp, h):
+                hn = norm_apply(ccfg, hp["final_norm"], h[:, -1:])
+                return logits_apply(ccfg, ctx, hp["embed"], hn)
+
+            cost = _cost_of(head_fn, (head_p, h_s), (head_sh, h_sh))
+            _merge(acc, cost)
+
+    # roofline terms: cost numbers are per-device (post-SPMD module).
+    # memory: the analytic TPU-fusion model is the roofline term; the
+    # CPU-HLO 'bytes accessed' (which materialises every intermediate) is
+    # kept as the upper bound.  collectives: HLO-parsed, bf16-adjusted for
+    # activations (grad all-reduce stays f32-exact).
+    mem_bytes = analytic_memory_bytes(cfg, shape, plan, mesh, rules)
+    adj_link = (acc["link_bytes"] - acc.get("link_bytes_exact_f32", 0.0)) \
+        * BF16_TRAFFIC_ADJ + acc.get("link_bytes_exact_f32", 0.0)
+    terms = ha.roofline_terms(acc["flops"], mem_bytes, adj_link)
+    terms_f32 = ha.roofline_terms(acc["flops"], acc["hbm_bytes"],
+                                  acc["link_bytes"])
+    mf = model_flops(cfg, shape)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": mesh.size,
+        "plan": {"fsdp": bool(plan.fsdp_axes), "accum": plan.accum_steps,
+                 "seq_axis": bool(plan.seq_axis),
+                 "moments": plan.moments_dtype},
+        "hlo_flops_per_device": acc["flops"],
+        "hlo_bytes_per_device_f32_bound": acc["hbm_bytes"],
+        "analytic_bytes_per_device": mem_bytes,
+        "link_bytes_per_device_f32": acc["link_bytes"],
+        "link_bytes_per_device": adj_link,
+        "collectives": acc["collectives"],
+        "compute_s": terms["compute_s"],
+        "memory_s": terms["memory_s"],
+        "memory_s_cpu_hlo_bound": terms_f32["memory_s"],
+        "collective_s": terms["collective_s"],
+        "collective_s_f32_bound": terms_f32["collective_s"],
+        "bottleneck": ha.dominant_term(terms),
+        "model_flops_total": mf,
+        "model_flops_per_device": mf / mesh.size,
+        "useful_flops_frac": (mf / mesh.size) / max(acc["flops"], 1.0),
+        "step_time_lower_bound_s": max(terms.values()),
+        "roofline_fraction": ((mf / mesh.size) / ha.PEAK_FLOPS)
+        / max(max(terms.values()), 1e-30),
+    }
+    return rec
+
+
+def _local_param_bytes(rules, mesh, cfg):
+    """Exact per-device parameter bytes under the cell's sharding rules."""
+    p_s = params_shapes(cfg)
+    flat, _ = jax.tree.flatten(p_s)
+    flat_sh, _ = jax.tree.flatten(rules.params(p_s))
+    total = 0
+    for leaf, sh in zip(flat, flat_sh):
+        n = leaf.size
+        for part in sh.spec:
+            if part is None:
+                continue
+            for a in (part if isinstance(part, tuple) else (part,)):
+                n //= mesh.shape[a]
+        total += n * leaf.dtype.itemsize
+    return total
+
+
+def _local_cache_bytes(rules, mesh, cfg, shape):
+    specs = input_specs(cfg, shape)
+    cache_s = specs[0] if shape.kind == "decode" else specs[1]
+    flat, _ = jax.tree.flatten(cache_s)
+    flat_sh, _ = jax.tree.flatten(rules.cache(cache_s))
+    total = 0
+    for leaf, sh in zip(flat, flat_sh):
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        for part in sh.spec:
+            if part is None:
+                continue
+            for a in (part if isinstance(part, tuple) else (part,)):
+                n //= mesh.shape[a]
+        total += n * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
+# Analytic HBM model constants (TPU fusion assumptions, bf16 activations):
+ACT_PASSES_FWD = 8  # boundary r/w of the ~4 fused super-ops per block side
+ACT_PASSES_BWD = 16  # recompute + dgrad/wgrad boundary traffic
+
+
+def analytic_memory_bytes(cfg, shape, plan, mesh, rules):
+    """Napkin-math per-device HBM bytes per step, documented term by term.
+
+    The CPU-compiled HLO's 'bytes accessed' materialises every intermediate
+    (no TPU-style fusion), so it is only an upper bound; this model is the
+    TPU-style estimate used for the memory roofline term.  Both are
+    reported.
+    """
+    b_loc = shape.global_batch
+    for a in plan.batch_axes:
+        if shape.global_batch % mesh.shape[a] == 0:
+            b_loc //= mesh.shape[a]
+    t = shape.seq_len
+    d = cfg.d_model
+    L = cfg.num_layers
+    pbytes = _local_param_bytes(rules, mesh, cfg)
+    act_layer = b_loc * t * d * 2  # bf16 block-boundary activation
+
+    if shape.kind == "train":
+        accum = plan.accum_steps
+        m_itemsize = 2 if plan.moments_dtype == "bfloat16" else 4
+        weights = pbytes * (1 + 1 + 2) * accum  # fwd + remat + dgrad reads,
+        # re-read once per microbatch
+        opt = pbytes * 2 + 2 * (pbytes // 2 * m_itemsize) * 2 + pbytes  # p rw,
+        # m/v rw (scaled by dtype), grads read
+        # act_layer covers the WHOLE per-device batch, so activation totals
+        # are accum-independent (each micro touches 1/accum of the tokens)
+        acts = L * act_layer * (ACT_PASSES_FWD + ACT_PASSES_BWD)
+        resid = L * act_layer * 2  # saved residuals: fwd write, bwd read
+        head = b_loc * t * (cfg.vocab_size // max(rules.tp, 1)) * 2 * 3
+        return weights + opt + acts + resid + head
+    if shape.kind == "prefill":
+        cache = _local_cache_bytes(rules, mesh, cfg, shape)
+        acts = L * act_layer * ACT_PASSES_FWD
+        # causal chunked attention re-reads K/V once per q chunk on average
+        # S/(2*chunk) times
+        qc = cfg.attn_chunk
+        kv_heads = max(cfg.num_kv_heads, 1)
+        kv_re = L * b_loc * t * kv_heads * cfg.head_dim_ * 2 * (
+            t / (2 * max(qc, 1)) / 1e0) if cfg.attention != "mla" else 0
+        return pbytes + acts + cache + kv_re
+    # decode: weights once + cache read/write + small activations
+    cache = _local_cache_bytes(rules, mesh, cfg, shape)
+    return pbytes + cache + L * b_loc * d * 2 * ACT_PASSES_FWD
+
+
+def _optimizer_cost(cfg, rules, mesh, plan):
+    """AdamW sweep + cross-data gradient all-reduce, costed on shards.
+
+    The DP grad all-reduce is an analytic schedule fact: each param leaf,
+    sharded per its spec, is summed over the batch axes it is NOT sharded
+    over.  Ring model: 2·bytes·(S-1)/S.
+    """
+    from repro.optim import adamw
+    p_s = params_shapes(cfg)
+    psh = rules.params(p_s)
+    opt_s = jax.eval_shape(lambda: adamw.init(p_s, plan.moments_dtype))
+    osh = adamw.OptState(rules.opt_state(p_s), rules.opt_state(p_s),
+                         NamedSharding(mesh, P()))
+    ocfg = adamw.AdamWConfig(moments_dtype=plan.moments_dtype)
+
+    def opt_fn(g, o, p):
+        new_p, new_o, _ = adamw.update(ocfg, g, o, p)
+        return new_p, new_o
+
+    cost = _cost_of(opt_fn, (p_s, opt_s, p_s), (psh, osh, psh))
+    f, bts, l, c = cost
+
+    # analytic DP all-reduce of grads (f32), ring over unused batch axes
+    dp = {a: mesh.shape[a] for a in plan.batch_axes}
+    extra = 0.0
+    flat, _ = jax.tree.flatten(p_s)
+    flat_sh, _ = jax.tree.flatten(psh)
+    for leaf, sh in zip(flat, flat_sh):
+        used = set()
+        for part in sh.spec:
+            if part is None:
+                continue
+            used.update(part if isinstance(part, tuple) else (part,))
+        s = 1
+        for a, n in dp.items():
+            if a not in used:
+                s *= n
+        if s > 1:
+            shard_elems = leaf.size
+            for part in sh.spec:
+                if part is None:
+                    continue
+                for a in (part if isinstance(part, tuple) else (part,)):
+                    shard_elems //= mesh.shape[a]
+            bytes_ = shard_elems * 4  # f32 grads
+            extra += 2.0 * bytes_ * (s - 1) / s
+    coll = dict(c)
+    slot = coll.setdefault("all-reduce", {"count": 0, "result_bytes": 0,
+                                          "link_bytes": 0.0})
+    slot["count"] += 1
+    slot["link_bytes"] += extra
+    return (f, bts, l + extra, coll), extra
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="experiments/roofline")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = ARCH_IDS if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape in shapes:
+            if not applicable(cfg, SHAPES[shape]):
+                continue
+            name = f"{arch}__{shape}"
+            print(f"=== roofline {name} ===", flush=True)
+            t0 = time.time()
+            try:
+                rec = cost_cell(arch, shape, multi_pod=args.multi_pod)
+                rec["analysis_s"] = round(time.time() - t0, 1)
+                with open(os.path.join(args.out, name + ".json"), "w") as f:
+                    json.dump(rec, f, indent=1)
+                print(f"--> {rec['bottleneck']}  "
+                      f"c={rec['compute_s']:.4f}s m={rec['memory_s']:.4f}s "
+                      f"n={rec['collective_s']:.4f}s "
+                      f"roofline={rec['roofline_fraction']:.3f} "
+                      f"({rec['analysis_s']}s)", flush=True)
+            except Exception as e:
+                print(f"--> FAILED {type(e).__name__}: {e}", flush=True)
+                traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

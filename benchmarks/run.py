@@ -1,0 +1,36 @@
+"""Benchmark runner: ``python -m benchmarks.run [--quick]``.
+
+Prints ``name,us_per_call,derived`` CSV rows — one section per paper
+table/figure (datapath throughput = Table V, FU census = Table VIII,
+randomized soak = §I, traversal = the RayCore workload, kNN = the
+generalized modes, model smoke = framework sanity).  The roofline analysis
+(production mesh) is separate: ``python -m benchmarks.roofline --all``.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the slower model-stack section")
+    args = ap.parse_args()
+
+    from . import bench_datapath, bench_knn, bench_traversal
+
+    rows: list[tuple] = []
+    bench_datapath.run(rows)
+    bench_traversal.run(rows)
+    bench_knn.run(rows)
+    if not args.quick:
+        from . import bench_models
+        bench_models.run(rows)
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

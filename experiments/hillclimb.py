@@ -1,0 +1,135 @@
+"""§Perf hillclimb driver: hypothesis → change → re-lower → record.
+
+Each variant is a (name, cfg_overrides, plan_overrides, hypothesis) tuple;
+the driver re-runs the roofline costing for the cell with the overrides and
+appends a record to experiments/perf/<cell>.jsonl.  The EXPERIMENTS.md
+§Perf table is written from these records.
+
+Usage:
+  python experiments/hillclimb.py --cell smollm-360m__train_4k
+  python experiments/hillclimb.py --all
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.roofline import cost_cell  # noqa: E402
+from repro.configs import SHAPES, get_config  # noqa: E402
+from repro.launch.mesh import make_plan, make_production_mesh  # noqa: E402
+
+
+def _cfg_with(cfg, overrides: dict):
+    moe_over = overrides.pop("moe", None)
+    mla_over = overrides.pop("mla", None)
+    if moe_over:
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, **moe_over))
+    if mla_over:
+        cfg = dataclasses.replace(cfg, mla=dataclasses.replace(cfg.mla, **mla_over))
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg
+
+
+# (name, cfg_overrides, plan_overrides, hypothesis)
+VARIANTS = {
+    # worst roofline fraction among train cells: compute-dominated by
+    # attention quadratic + remat recompute for a tiny d_model
+    "smollm-360m__train_4k": [
+        ("no_block_remat", {"remat": "none"}, {},
+         "block remat re-runs the forward inside backward: ~25% of compute;"
+         " a 360M model's activations fit at accum=8, so drop remat ->"
+         " compute term x0.75"),
+        ("no_remat+chunk256", {"remat": "none", "attn_chunk": 256}, {},
+         "also halve the attention chunk: the causal diagonal chunk wastes"
+         " qc/2 columns (12.5%->6% of attention flops)"),
+    ],
+    # most collective-bound: FSDP weight all-gathers per layer per micro
+    "granite-34b__train_4k": [
+        ("accum_2", {}, {"accum_steps": 2},
+         "FSDP re-gathers every weight each microbatch: accum 8->2 cuts"
+         " gather traffic 4x; residual memory x4 (2->8 seq/device, "
+         " 88L x 8seq x 4096 x 6144 x 2B = 3.5G, fits)"),
+        ("no_fsdp+bf16_moments", {}, {"fsdp_axes": (),
+                                      "moments_dtype": "bfloat16"},
+         "34B f32 = 8.5G/chip TP-only: no per-layer weight gathers at all;"
+         " bf16 moments recover the HBM the FSDP removal costs"),
+    ],
+    # most representative of the paper's technique: MoE router = OpAngular;
+    # EP combine psum dominates collectives
+    "phi3.5-moe-42b-a6.6b__train_4k": [
+        ("bf16_combine", {"moe": {"combine_dtype": "bfloat16"}}, {},
+         "the EP combine psum moves (tokens x d_model) f32 per MoE layer;"
+         " outputs are bf16 anyway -> halve the payload"),
+        ("bf16_combine+accum2", {"moe": {"combine_dtype": "bfloat16"}},
+         {"accum_steps": 2},
+         "then attack the FSDP weight re-gathers: accum 8->2 cuts them 4x"),
+    ],
+}
+
+
+def run_cell(cell: str, out_dir: str):
+    arch, shape = cell.rsplit("__", 1)
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, cell + ".jsonl")
+    done = set()
+    if os.path.exists(path):
+        with open(path) as f:
+            done = {json.loads(line)["variant"] for line in f}
+
+    def record(rec):
+        with open(path, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+
+    if "baseline" not in done:
+        t0 = time.time()
+        rec = cost_cell(arch, shape)
+        rec.update(variant="baseline", hypothesis="paper-faithful baseline",
+                   wall_s=round(time.time() - t0, 1))
+        record(rec)
+        print(f"[baseline] c={rec['compute_s']:.3f} m={rec['memory_s']:.3f} "
+              f"n={rec['collective_s']:.3f} dom={rec['bottleneck']} "
+              f"roofline={rec['roofline_fraction']:.4f}", flush=True)
+
+    for name, cfg_over, plan_over, hyp in VARIANTS.get(cell, []):
+        if name in done:
+            continue
+        cfg = _cfg_with(get_config(arch), dict(cfg_over))
+        plan = make_plan(cfg, SHAPES[shape], multi_pod=False)
+        if plan_over:
+            plan = dataclasses.replace(plan, **plan_over)
+        t0 = time.time()
+        try:
+            rec = cost_cell(arch, shape, cfg_override=cfg, plan_override=plan)
+            rec.update(variant=name, hypothesis=hyp,
+                       wall_s=round(time.time() - t0, 1))
+            record(rec)
+            print(f"[{name}] c={rec['compute_s']:.3f} m={rec['memory_s']:.3f}"
+                  f" n={rec['collective_s']:.3f} dom={rec['bottleneck']} "
+                  f"roofline={rec['roofline_fraction']:.4f}", flush=True)
+        except Exception as e:
+            record({"variant": name, "hypothesis": hyp,
+                    "error": f"{type(e).__name__}: {e}"})
+            print(f"[{name}] FAILED {e}", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", choices=list(VARIANTS))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args()
+    cells = list(VARIANTS) if args.all or not args.cell else [args.cell]
+    for cell in cells:
+        print(f"===== {cell} =====", flush=True)
+        run_cell(cell, args.out)
+
+
+if __name__ == "__main__":
+    main()

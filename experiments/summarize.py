@@ -1,0 +1,157 @@
+"""Render the dry-run and roofline JSON records into markdown tables.
+
+Usage: python experiments/summarize.py [--dryrun-dir d] [--roofline-dir d]
+Prints markdown to stdout (pasted into EXPERIMENTS.md by the maintainer).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+GB = 1 << 30
+HBM_PER_CHIP = 16 * GB  # v5e
+
+
+def load(d):
+    out = []
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(f) as fh:
+            out.append(json.load(fh))
+    return out
+
+
+ARCH_ORDER = ["smollm-360m", "granite-34b", "chatglm3-6b", "stablelm-1.6b",
+              "whisper-small", "jamba-1.5-large-398b", "rwkv6-7b",
+              "internvl2-2b", "phi3.5-moe-42b-a6.6b", "deepseek-v3-671b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _key(r):
+    return (ARCH_ORDER.index(r["arch"]), SHAPE_ORDER.index(r["shape"]),
+            r.get("mesh", ""))
+
+
+def dryrun_table(records):
+    print("| arch | shape | mesh | status | compile s | HLO GF/dev | "
+          "bytes/dev (arg+out+tmp) | fits 16G | collectives (top) |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in sorted(records, key=_key):
+        if "skipped" in r:
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                  f"skip-by-design | - | - | - | - | - |")
+            continue
+        if not r.get("ok"):
+            err = r.get("error", "?")[:60]
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                  f"FAILED: {err} | - | - | - | - | - |")
+            continue
+        mem = r.get("memory") or {}
+        tot = mem.get("total_bytes_per_device", 0)
+        colls = r.get("collectives", {})
+        top = sorted(colls.items(), key=lambda kv: -kv[1]["link_bytes"])[:2]
+        cstr = ";".join(f"{k}x{v['count']}" for k, v in top) or "none"
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | OK | "
+              f"{r.get('compile_s', 0):.0f} | "
+              f"{r.get('hlo_flops', 0) / 1e9:.0f} | "
+              f"{tot / GB:.1f} GiB | "
+              f"{'Y' if tot <= HBM_PER_CHIP else 'N'} | {cstr} |")
+
+
+def roofline_table(records):
+    print("| arch | shape | compute s | memory s | collective s | bottleneck"
+          " | useful frac | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in sorted(records, key=_key):
+        print(f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+              f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+              f"{r['bottleneck'].replace('_s', '')} | "
+              f"{r['useful_flops_frac']:.3f} | "
+              f"{r['roofline_fraction']:.4f} |")
+
+
+def perf_table(perf_dir):
+    import io
+    rows = []
+    for f in sorted(glob.glob(os.path.join(perf_dir, "*.jsonl"))):
+        cell = os.path.basename(f)[:-6]
+        with open(f) as fh:
+            recs = [json.loads(line) for line in fh]
+        base = next((r for r in recs if r.get("variant") == "baseline"), None)
+        print(f"\n#### {cell}\n")
+        print("| variant | hypothesis | compute s | memory s | collective s |"
+              " bottleneck | roofline frac | Δ dominant vs baseline |")
+        print("|---|---|---|---|---|---|---|---|")
+        for r in recs:
+            if "error" in r:
+                print(f"| {r['variant']} | {r['hypothesis'][:70]} | - | - |"
+                      f" - | FAILED: {r['error'][:40]} | - | - |")
+                continue
+            delta = ""
+            if base and r is not base:
+                dom = base["bottleneck"]
+                delta = f"{(r[dom] / base[dom] - 1) * 100:+.0f}%"
+            print(f"| {r['variant']} | {r.get('hypothesis', '')[:70]} | "
+                  f"{r['compute_s']:.3f} | {r['memory_s']:.3f} | "
+                  f"{r['collective_s']:.3f} | "
+                  f"{r['bottleneck'].replace('_s', '')} | "
+                  f"{r['roofline_fraction']:.4f} | {delta} |")
+
+
+def _capture(fn, *args):
+    import contextlib
+    import io
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        fn(*args)
+    return buf.getvalue()
+
+
+def write_into_experiments(md_path, dr, rf, perf_dir):
+    """Replace the <!-- *_TABLE --> placeholders in EXPERIMENTS.md."""
+    with open(md_path) as f:
+        text = f.read()
+    anchors = {
+        "<!-- DRYRUN_TABLE -->": _capture(dryrun_table, dr) if dr else "",
+        "<!-- ROOFLINE_TABLE -->": _capture(roofline_table, rf) if rf else "",
+        "<!-- PERF_TABLE -->": (_capture(perf_table, perf_dir)
+                                if glob.glob(os.path.join(perf_dir, "*.jsonl"))
+                                else ""),
+    }
+    for anchor, table in anchors.items():
+        if table and anchor in text:
+            text = text.replace(anchor, anchor + "\n" + table)
+    with open(md_path, "w") as f:
+        f.write(text)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun-dir", default="experiments/dryrun")
+    ap.add_argument("--roofline-dir", default="experiments/roofline")
+    ap.add_argument("--perf-dir", default="experiments/perf")
+    ap.add_argument("--write", metavar="EXPERIMENTS_MD",
+                    help="insert tables at the placeholder anchors")
+    args = ap.parse_args()
+    dr = load(args.dryrun_dir)
+    rf = load(args.roofline_dir)
+    if args.write:
+        write_into_experiments(args.write, dr, rf, args.perf_dir)
+        print(f"wrote tables into {args.write}")
+        return
+    if dr:
+        print(f"### Dry-run matrix ({len(dr)} cells)\n")
+        dryrun_table(dr)
+        print()
+    if rf:
+        print(f"### Roofline table ({len(rf)} cells, single-pod 16x16)\n")
+        roofline_table(rf)
+        print()
+    if glob.glob(os.path.join(args.perf_dir, "*.jsonl")):
+        print("### Perf hillclimb\n")
+        perf_table(args.perf_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,161 @@
+"""Checkpointing: async, atomic, per-leaf files, elastic restore.
+
+Layout:   <dir>/step_%08d/
+            manifest.json       {step, leaves: {flatkey: {shape,dtype,file}},
+                                 extra: {...}}       (written LAST)
+            <flatkey>.npy       one file per pytree leaf
+
+Guarantees engineered for the 1000-node posture:
+
+* **Atomic** — written into ``step_X.tmp`` then ``os.rename``'d; a manifest
+  only exists for complete checkpoints, so a crash mid-save can never
+  produce a checkpoint that restores (restore scans for the newest
+  directory WITH a manifest).
+* **Async** — ``save(...)`` snapshots to host memory (device_get) and
+  returns; a writer thread does the I/O.  ``wait()`` joins (tested:
+  training continues during the write, bit-exact restore afterwards).
+* **Elastic** — leaves are stored unsharded (np arrays); ``restore`` takes
+  an optional shardings pytree and ``device_put``s each leaf onto the *new*
+  mesh, so a checkpoint saved on mesh A restores onto mesh B (resharding on
+  restore is exactly how single-controller JAX deployments rescale).
+  On a multi-host deployment each host would read only its shard slices —
+  the manifest carries shapes so hosts can index; here (single-process) a
+  full read + device_put expresses the same contract.
+* **Retention** — keeps the newest ``keep`` checkpoints, deletes older.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _key_str(k) -> str:
+    for attr in ("key", "idx", "name"):
+        if hasattr(k, attr):
+            return str(getattr(k, attr))
+    return str(k)
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(_key_str(k) for k in path)
+        out[key] = leaf
+    return out, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ---- save -------------------------------------------------------------
+
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None,
+             block: bool = False):
+        """Snapshot now, write in the background (or block=True)."""
+        self.wait()  # one outstanding save at a time
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        if block:
+            self._write(step, host_tree, extra or {})
+            return
+        self._thread = threading.Thread(
+            target=self._write_guarded, args=(step, host_tree, extra or {}),
+            daemon=True)
+        self._thread.start()
+
+    def _write_guarded(self, step, host_tree, extra):
+        try:
+            self._write(step, host_tree, extra)
+        except BaseException as e:  # surfaced on next wait()/save()
+            self._error = e
+
+    def _write(self, step: int, host_tree, extra: dict):
+        name = f"step_{step:08d}"
+        tmp = os.path.join(self.dir, name + ".tmp")
+        final = os.path.join(self.dir, name)
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        flat, _ = _flatten(host_tree)
+        manifest = {"step": step, "extra": extra, "leaves": {}}
+        for key, leaf in flat.items():
+            fname = key.replace("/", "__") + ".npy"
+            np.save(os.path.join(tmp, fname), leaf)
+            manifest["leaves"][key] = {
+                "shape": list(leaf.shape), "dtype": str(leaf.dtype),
+                "file": fname}
+        # manifest last: its existence marks completeness
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise e
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ---- restore ------------------------------------------------------------
+
+    def all_steps(self):
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.dir, d, "manifest.json")):
+                    out.append(int(d[5:]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, target: Any, shardings: Any = None):
+        """Restore into the structure of ``target`` (a pytree of arrays or
+        ShapeDtypeStructs).  ``shardings``: matching pytree of NamedSharding
+        for elastic placement onto the current mesh."""
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        flat_t, treedef = _flatten(target)
+        leaves = {}
+        for key in flat_t:
+            info = manifest["leaves"][key]
+            arr = np.load(os.path.join(d, info["file"]))
+            leaves[key] = arr
+        restored_flat = [leaves[k] for k in flat_t]
+        tree = jax.tree.unflatten(treedef, restored_flat)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), tree, shardings)
+        return tree, manifest["extra"]
+
+    def restore_latest(self, target: Any, shardings: Any = None):
+        step = self.latest_step()
+        if step is None:
+            return None
+        tree, extra = self.restore(step, target, shardings)
+        return step, tree, extra

@@ -1,0 +1,3 @@
+"""Assigned architecture configs (exact published hyperparameters) + shapes."""
+from .registry import ARCH_IDS, all_configs, get_config, get_smoke  # noqa: F401
+from .shapes import SHAPES, ShapeSpec, applicable, cells, input_specs  # noqa: F401

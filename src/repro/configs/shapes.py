@@ -1,0 +1,96 @@
+"""Assigned input shapes and per-cell input specs (ShapeDtypeStruct only).
+
+Each architecture is paired with four shapes; ``input_specs`` builds the
+exact abstract inputs a cell's step function lowers against — no device
+allocation ever happens for full configs (dry-run contract).
+
+  train_4k     seq 4,096   global_batch 256   -> train_step
+  prefill_32k  seq 32,768  global_batch 32    -> serve prefill
+  decode_32k   seq 32,768  global_batch 128   -> serve decode (1 new token,
+                                                 KV cache of seq_len)
+  long_500k    seq 524,288 global_batch 1     -> decode; SSM/hybrid only
+                                                 (sub-quadratic state), see
+                                                 DESIGN.md §Arch-applicability
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..models import ModelConfig, cache_shapes
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # 'train' | 'prefill' | 'decode'
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+# long_500k needs sub-quadratic sequence mixing: run for SSM/hybrid archs,
+# skip (by design) for pure full-attention archs.
+LONG_OK_FAMILIES = ("hybrid", "ssm")
+
+
+def applicable(cfg: ModelConfig, shape: ShapeSpec) -> bool:
+    if shape.name == "long_500k":
+        return cfg.family in LONG_OK_FAMILIES
+    return True
+
+
+def cells(cfg: ModelConfig):
+    return [s for s in SHAPES.values() if applicable(cfg, s)]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _batch_specs(cfg: ModelConfig, b: int, t: int, with_labels: bool):
+    """Token batch + modality stubs (frames/patches are *precomputed
+    embeddings* — the frontend is a stub per the assignment)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    t_text = t - cfg.vision_tokens if cfg.family == "vlm" else t
+    batch = {"tokens": _sds((b, t_text), jnp.int32)}
+    if with_labels:
+        batch["labels"] = _sds((b, t_text), jnp.int32)
+    if cfg.family == "audio":
+        batch["frames"] = _sds((b, cfg.encoder.seq_len, cfg.d_model), cd)
+    if cfg.family == "vlm":
+        batch["patches"] = _sds((b, cfg.vision_tokens, cfg.d_model), cd)
+    return batch
+
+
+def _cache_specs(cfg: ModelConfig, b: int, max_len: int):
+    shapes = cache_shapes(cfg, b, max_len)
+    return jax.tree.map(
+        lambda sd: _sds(sd[0], sd[1]), shapes,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+        and isinstance(x[0], tuple))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """Abstract inputs for the cell's step function.
+
+    train  -> (batch,)
+    prefill-> (batch, cache)           cache sized seq_len (+ a little slack)
+    decode -> (cache, tokens (B,1))    cache sized seq_len, length==seq-1
+    """
+    b, t = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return (_batch_specs(cfg, b, t, with_labels=True),)
+    if shape.kind == "prefill":
+        return (_batch_specs(cfg, b, t, with_labels=False),
+                _cache_specs(cfg, b, t))
+    # decode: one new token against a cache of seq_len
+    return (_cache_specs(cfg, b, t), _sds((b, 1), jnp.int32))

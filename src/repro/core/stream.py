@@ -1,0 +1,147 @@
+"""Unified datapath stream: heterogeneous in-order job processing.
+
+This is the JAX mirror of the paper's top-level ``UnifiedDatapath`` module:
+jobs of all four opcodes enter one pipeline in order; per-mode accumulators
+persist across (and only across) jobs of their own mode, so multi-beat
+Euclidean/angular jobs can be interleaved with box/triangle work "over an
+indefinite time frame" (Table V).
+
+Two execution strategies, same semantics:
+
+* :func:`unified_stream` — a ``lax.scan`` over jobs.  Exactly reproduces the
+  hardware's in-order accumulator behaviour; this is the oracle the tests and
+  the Pallas unified kernel are validated against.
+* For throughput work, use the batched per-mode ops in ``repro.core.datapath``
+  or the Pallas kernels (``repro.kernels``) which group jobs by opcode per
+  tile — the TPU analogue of the shared-FU pipeline (see DESIGN.md §2).
+
+Like the paper's single union bundle type (§III-C), :class:`DatapathJob`
+carries every mode's fields; XLA dead-code-eliminates unused ones per
+program, exactly as the Chisel compiler prunes dead bundle fields.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .datapath import angular_partial, euclidean_partial, ray_box_test, ray_triangle_test
+from .types import (
+    OP_ANGULAR,
+    OP_EUCLIDEAN,
+    OP_QUADBOX,
+    OP_TRIANGLE,
+    VECTOR_LANES,
+    Box,
+    DatapathState,
+    Ray,
+    Triangle,
+    init_datapath_state,
+)
+
+
+class DatapathJob(NamedTuple):
+    """Union input bundle (Table V inputs), batched over a leading axis."""
+
+    opcode: jax.Array  # (N,) i32
+    ray: Ray  # fields (N, ...) -- used by OpTriangle / OpQuadbox
+    boxes: Box  # (N, 4, 3) -- OpQuadbox
+    triangle: Triangle  # (N, 3) -- OpTriangle
+    vec_a: jax.Array  # (N, 16) -- OpEuclidean (a) / OpAngular (q, lanes 0..7)
+    vec_b: jax.Array  # (N, 16) -- OpEuclidean (b) / OpAngular (c, lanes 0..7)
+    mask: jax.Array  # (N, 16) bool
+    reset_accum: jax.Array  # (N,) bool
+
+
+class DatapathOutput(NamedTuple):
+    """Union output bundle (Table V outputs).  Fields are valid per-opcode."""
+
+    opcode: jax.Array  # (N,)
+    # OpQuadbox
+    tmin: jax.Array  # (N, 4) sorted
+    box_index: jax.Array  # (N, 4)
+    is_intersect: jax.Array  # (N, 4) bool
+    # OpTriangle
+    t_num: jax.Array  # (N,)
+    t_denom: jax.Array  # (N,)
+    triangle_hit: jax.Array  # (N,) bool
+    # OpEuclidean
+    euclidean_accumulator: jax.Array  # (N,)
+    # OpAngular
+    angular_dot_product: jax.Array  # (N,)
+    angular_norm: jax.Array  # (N,)
+    reset_accum: jax.Array  # (N,) bool (propagated)
+
+
+def make_jobs(n: int) -> DatapathJob:
+    """An all-zero job batch to be filled in (convenience for tests/benches)."""
+    f = jnp.zeros
+    ray = Ray(
+        origin=f((n, 3), jnp.float32), direction=jnp.ones((n, 3), jnp.float32),
+        inv=jnp.ones((n, 3), jnp.float32), extent=jnp.full((n,), jnp.inf),
+        kx=f((n,), jnp.int32), ky=f((n,), jnp.int32), kz=f((n,), jnp.int32),
+        shear=jnp.ones((n, 3), jnp.float32))
+    return DatapathJob(
+        opcode=f((n,), jnp.int32), ray=ray,
+        boxes=Box(f((n, 4, 3), jnp.float32), f((n, 4, 3), jnp.float32)),
+        triangle=Triangle(f((n, 3), jnp.float32), f((n, 3), jnp.float32), f((n, 3), jnp.float32)),
+        vec_a=f((n, VECTOR_LANES), jnp.float32), vec_b=f((n, VECTOR_LANES), jnp.float32),
+        mask=jnp.ones((n, VECTOR_LANES), bool), reset_accum=f((n,), bool))
+
+
+def _job_compute(state: DatapathState, job: DatapathJob):
+    """One pipeline traversal: all four mode datapaths run on the shared FUs;
+    outputs and accumulator updates are selected by opcode (Table V validity).
+    """
+    op = job.opcode
+    qb = ray_box_test(job.ray, job.boxes)
+    tr = ray_triangle_test(job.ray, job.triangle)
+    e_partial = euclidean_partial(job.vec_a, job.vec_b, job.mask)
+    a_dot, a_nrm = angular_partial(job.vec_a, job.vec_b, job.mask)
+
+    reset = job.reset_accum
+    is_e = op == OP_EUCLIDEAN
+    is_a = op == OP_ANGULAR
+
+    e_in = jnp.where(reset, 0.0, state.euclid_accum)
+    d_in = jnp.where(reset, 0.0, state.dot_accum)
+    n_in = jnp.where(reset, 0.0, state.norm_accum)
+
+    e_out = e_partial + e_in
+    d_out = a_dot + d_in
+    n_out = a_nrm + n_in
+
+    # Per-mode accumulator isolation: a mode's accumulator only moves when a
+    # job of that mode passes through.
+    new_state = DatapathState(
+        euclid_accum=jnp.where(is_e, e_out, state.euclid_accum),
+        dot_accum=jnp.where(is_a, d_out, state.dot_accum),
+        norm_accum=jnp.where(is_a, n_out, state.norm_accum),
+    )
+    out = DatapathOutput(
+        opcode=op,
+        tmin=qb.tmin, box_index=qb.box_index, is_intersect=qb.is_intersect,
+        t_num=tr.t_num, t_denom=tr.t_denom, triangle_hit=tr.hit,
+        euclidean_accumulator=e_out,
+        angular_dot_product=d_out, angular_norm=n_out,
+        reset_accum=reset,
+    )
+    return new_state, out
+
+
+def unified_stream(jobs: DatapathJob, state: DatapathState | None = None):
+    """Process a job stream in order; returns (final_state, outputs).
+
+    jobs: leading axis N = time order (one job per initiation interval).
+    """
+    if state is None:
+        state = init_datapath_state()
+
+    def step(carry, job):
+        return _job_compute(carry, job)
+
+    return jax.lax.scan(step, state, jobs)
+
+
+unified_stream_jit = jax.jit(unified_stream)

@@ -1,0 +1,167 @@
+"""Data representations of the Ray Tracer Datapath (paper Tables I-IV).
+
+Everything is stored SoA-style as JAX arrays with an arbitrary batch prefix
+``(...,)`` so the same structures flow through vmap, pjit and Pallas kernels.
+
+Faithfulness notes
+------------------
+* ``Ray`` carries the paper's derived convenience fields (Table III): the
+  element-wise inverse of the direction, the max-dimension indices
+  ``kx/ky/kz`` and the shear constants ``Sx/Sy/Sz`` — computed in
+  :func:`make_ray` with exactly the pseudocode of §II-B3.
+* ``Box`` is a min/max vertex pair (Table I); ``Triangle`` is three vertices
+  (Table II); vector jobs (Table IV) are plain ``(..., dim)`` arrays with a
+  validity mask capped at :data:`VECTOR_LANES` lanes per beat.
+* Opcodes mirror Table V's 2-bit opcode.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Opcodes (Table V: 2-bit opcode)
+# ---------------------------------------------------------------------------
+OP_TRIANGLE = 0
+OP_QUADBOX = 1
+OP_EUCLIDEAN = 2
+OP_ANGULAR = 3
+
+OPCODE_NAMES = {
+    OP_TRIANGLE: "OpTriangle",
+    OP_QUADBOX: "OpQuadbox",
+    OP_EUCLIDEAN: "OpEuclidean",
+    OP_ANGULAR: "OpAngular",
+}
+
+# Table IV: vector dimension is capped at 16 per beat; the angular mode
+# processes half that many lanes per beat (each lane needs two multipliers).
+VECTOR_LANES = 16
+ANGULAR_LANES = VECTOR_LANES // 2
+
+# Number of boxes per quad-box job (Table V: aabb_0..aabb_3).
+QUAD = 4
+
+
+class Box(NamedTuple):
+    """An axis-aligned bounding box (Table I): minimum and maximum vertices."""
+
+    lo: jax.Array  # (..., 3) f32  [x_min, y_min, z_min]
+    hi: jax.Array  # (..., 3) f32  [x_max, y_max, z_max]
+
+
+class Triangle(NamedTuple):
+    """A triangle in 3D (Table II): three vertices."""
+
+    a: jax.Array  # (..., 3) f32
+    b: jax.Array  # (..., 3) f32
+    c: jax.Array  # (..., 3) f32
+
+
+class Ray(NamedTuple):
+    """A ray plus the paper's precomputed convenience fields (Table III)."""
+
+    origin: jax.Array  # (..., 3) f32
+    direction: jax.Array  # (..., 3) f32
+    inv: jax.Array  # (..., 3) f32   element-wise inverse of direction
+    extent: jax.Array  # (...,)   f32   how far the ray travels
+    kx: jax.Array  # (...,)   i32   \
+    ky: jax.Array  # (...,)   i32    } permuted max-dimension indices
+    kz: jax.Array  # (...,)   i32   /
+    shear: jax.Array  # (..., 3) f32   [Sx, Sy, Sz]
+
+
+def make_ray(origin: jax.Array, direction: jax.Array, extent=None) -> Ray:
+    """Ray setup: derive inv/k-indices/shear exactly per Table III pseudocode.
+
+    This corresponds to the external "ray setup" the paper assumes happens
+    before jobs enter the datapath (the derived fields are inputs in Table V).
+    """
+    origin = jnp.asarray(origin, jnp.float32)
+    direction = jnp.asarray(direction, jnp.float32)
+    if extent is None:
+        extent = jnp.full(origin.shape[:-1], jnp.inf, jnp.float32)
+    else:
+        extent = jnp.broadcast_to(jnp.asarray(extent, jnp.float32), origin.shape[:-1])
+
+    inv = 1.0 / direction  # inv_x <- 1/dir_x etc. (div-by-zero -> +-inf, as in HW)
+
+    # maxInd <- dimension of greatest direction component (strict '>' chain per
+    # the paper's pseudocode; ties resolve to the earliest dimension).  The
+    # magnitude is what matters -- Woop et al. take argmax(|dir|); the paper's
+    # subsequent "if dir[kz] < 0 swap(kx, ky)" step only makes sense under the
+    # absolute-value reading.
+    dx, dy, dz = (jnp.abs(direction[..., 0]), jnp.abs(direction[..., 1]),
+                  jnp.abs(direction[..., 2]))
+    max_ind = jnp.zeros(dx.shape, jnp.int32)
+    max_val = dx
+    max_ind = jnp.where(dy > max_val, 1, max_ind)
+    max_val = jnp.where(dy > max_val, dy, max_val)
+    max_ind = jnp.where(dz > max_val, 2, max_ind)
+
+    kz = max_ind
+    kx = (kz + 1) % 3
+    ky = (kx + 1) % 3
+    # if dir[kz] < 0 then swap(kx, ky)  -- preserves winding for watertight test
+    dir_kz = jnp.take_along_axis(direction, kz[..., None], axis=-1)[..., 0]
+    neg = dir_kz < 0.0
+    kx, ky = jnp.where(neg, ky, kx), jnp.where(neg, kx, ky)
+
+    # Shear constants: Sx = dir[kx]/dir[kz]; Sy = dir[ky]/dir[kz]; Sz = 1/dir[kz]
+    dir_kx = jnp.take_along_axis(direction, kx[..., None], axis=-1)[..., 0]
+    dir_ky = jnp.take_along_axis(direction, ky[..., None], axis=-1)[..., 0]
+    shear = jnp.stack([dir_kx / dir_kz, dir_ky / dir_kz, 1.0 / dir_kz], axis=-1)
+
+    return Ray(origin, direction, inv, extent, kx, ky, kz, shear)
+
+
+class QuadBoxResult(NamedTuple):
+    """Output bundle of an OpQuadbox job (Table V, opcode==opQuadbox fields).
+
+    ``tmin`` is sorted ascending; ``box_index[i]`` links slot i back to the
+    input box; ``is_intersect[i]`` says whether that (sorted) slot hit.
+    """
+
+    tmin: jax.Array  # (..., 4) f32 sorted ascending
+    box_index: jax.Array  # (..., 4) i32
+    is_intersect: jax.Array  # (..., 4) bool
+
+
+class TriangleResult(NamedTuple):
+    """Output bundle of an OpTriangle job: t = t_num / t_denom is external."""
+
+    t_num: jax.Array  # (...,) f32
+    t_denom: jax.Array  # (...,) f32
+    hit: jax.Array  # (...,) bool
+
+
+class EuclideanResult(NamedTuple):
+    accumulator: jax.Array  # (...,) f32  running sum of squares
+    reset_accum: jax.Array  # (...,) bool (propagated from input)
+
+
+class AngularResult(NamedTuple):
+    dot_product: jax.Array  # (...,) f32  running sum of products
+    norm: jax.Array  # (...,) f32  running sum of candidate squares
+    reset_accum: jax.Array  # (...,) bool (propagated from input)
+
+
+class DatapathState(NamedTuple):
+    """Internal accumulators (Table V: per-mode, isolated from each other)."""
+
+    euclid_accum: jax.Array  # () or (lanes_of_stream,) f32
+    dot_accum: jax.Array
+    norm_accum: jax.Array
+
+
+def init_datapath_state(shape=()) -> DatapathState:
+    z = jnp.zeros(shape, jnp.float32)
+    return DatapathState(z, z, z)
+
+
+def aabb_of_triangles(tri: Triangle) -> Box:
+    """Convenience: tight AABB of each triangle (used by the BVH builder)."""
+    v = jnp.stack([tri.a, tri.b, tri.c], axis=-2)  # (..., 3verts, 3)
+    return Box(lo=v.min(axis=-2), hi=v.max(axis=-2))

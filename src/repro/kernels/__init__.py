@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the datapath hot-spots, each with ops.py wrapper
+and ref.py pure-jnp oracle (validated in interpret mode on CPU)."""
+from .common import LANES, round_stage  # noqa: F401
+from .raybox import raybox_pallas  # noqa: F401
+from .raytri import raytri_pallas  # noqa: F401
+from .distance import angular_pallas, distance_pallas, norms_pallas  # noqa: F401
+from .unified import unified_pallas  # noqa: F401
+from .ops import (  # noqa: F401
+    angular_kernel,
+    euclidean_kernel,
+    ray_box_kernel,
+    ray_triangle_kernel,
+    unified_datapath,
+)
+from . import ref  # noqa: F401

@@ -1,0 +1,115 @@
+"""Shared kernel-side stage primitives and the unified operand row layout.
+
+TPU adaptation notes (DESIGN.md §2)
+-----------------------------------
+The RTL pipeline lays jobs out in *time* (one job per cycle through shared
+FUs).  The TPU kernels lay jobs out in *lanes*: a tile is ``(rows, LANES)``
+with one job per lane, rows holding the job's fields.  ``LANES = 128``
+matches the VPU lane width; row counts are padded to multiples of 8
+(f32 sublane tiling), so every tile is VMEM/VREG aligned.
+
+The compare-select helpers here have the same NaN semantics as the
+hardware comparators (see ``repro.core.datapath``) and are shared by every
+kernel -- the code-level analogue of the paper's shared functional units.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LANES = 128  # jobs per tile (VPU lane width)
+
+
+def round_stage(x: jax.Array) -> jax.Array:
+    """Mark a per-stage rounding boundary (paper §III-D, choice (d)).
+
+    On a real TPU every Mosaic VPU op rounds to f32 — the paper's
+    round-at-every-functional-unit choice is *native*, and these markers
+    delimit exactly where the RTL's rounding circuits sit.  In ``interpret``
+    mode the kernel body is XLA-compiled for CPU, where LLVM contracts a
+    ``mul`` feeding an ``add`` into an FMA (measured: not disabled by
+    ``optimization_barrier`` nor any ``--xla_cpu_*`` flag), i.e. CPU
+    validation sees *extra* precision at these boundaries.  Tests therefore
+    compare kernel-vs-oracle with one-FMA ULP tolerances on t_num/t_denom
+    and distance sums; everything reachable without a mul->add chain
+    (ray-box, sort networks, hit logic) is compared bit-exactly.
+
+    Kept as an identity seam: Mosaic has no lowering rule for
+    ``lax.optimization_barrier``, so a hard barrier would break real-TPU
+    compilation for zero benefit there.
+    """
+    return x
+
+# ---------------------------------------------------------------------------
+# Unified operand layout (rows x LANES), one job per lane.  Mirrors the
+# paper's single union input bundle (Table V / §III-C): every mode's fields
+# live at fixed rows; modes ignore rows they do not use.
+# ---------------------------------------------------------------------------
+ROW_ORG = 0  # rows 0..2   ray origin            (quadbox, triangle)
+ROW_INV = 3  # rows 3..5   ray inverse direction (quadbox)
+ROW_NEG = 6  # rows 6..8   ray direction sign    (quadbox: 1.0 if signbit)
+ROW_SHEAR = 3  # rows 3..5   ray shear Sx,Sy,Sz  (triangle; reuses INV rows --
+#                            the two modes never need both, like shared regs)
+ROW_K = 6  # rows 6..8   kx,ky,kz as f32          (triangle; reuses NEG rows)
+ROW_BOX_LO = 9  # rows 9..20   4 boxes x 3 dims (quadbox; shares VEC_A rows)
+ROW_BOX_HI = 25  # rows 25..36  4 boxes x 3 dims (quadbox; shares VEC_B rows)
+ROW_TRI_A = 9  # rows 9..11   vertex A (triangle)
+ROW_TRI_B = 12  # rows 12..14  vertex B
+ROW_TRI_C = 15  # rows 15..17  vertex C
+ROW_VEC_A = 9  # rows 9..24   vector a / q, 16 lanes-of-dimension (euclid/ang)
+ROW_VEC_B = 25  # rows 25..40  vector b / c
+ROW_MASK = 41  # row 41       lane-validity mask (1.0/0.0)
+ROW_RESET = 42  # row 42      accumulator reset flag (1.0/0.0)
+N_OPERAND_ROWS = 48  # padded to a multiple of 8
+
+# Unified output layout (rows x LANES).
+OUT_TMIN = 0  # rows 0..3   sorted tmin          (quadbox)
+OUT_IDX = 4  # rows 4..7    sorted box indices   (quadbox, as f32)
+OUT_HIT = 8  # rows 8..11   sorted hit mask      (quadbox, as f32)
+OUT_TNUM = 0  # row 0       t_num                (triangle)
+OUT_TDENOM = 1  # row 1     t_denom              (triangle)
+OUT_THIT = 2  # row 2       hit                  (triangle)
+OUT_EUCLID = 0  # row 0     accumulator          (euclidean)
+OUT_DOT = 0  # row 0        dot product          (angular)
+OUT_NORM = 1  # row 1       norm                 (angular)
+OUT_RESET = 12  # row 12    propagated reset     (euclid/angular)
+N_OUTPUT_ROWS = 16
+
+
+def fmax_rows(a, b):
+    """Comparator-style max: keeps ``b`` when the compare is false (NaN a)."""
+    return jnp.where(a > b, a, b)
+
+
+def fmin_rows(a, b):
+    return jnp.where(a < b, a, b)
+
+
+def quadsort_rows(keys: list, payloads: list[list]):
+    """The paper's 4-input sorting network over row vectors.
+
+    ``keys``: list of 4 arrays (each one lane-row); ``payloads``: list of
+    lists-of-4 permuted alongside.  5 compare-exchanges: (0,1)(2,3)(0,2)(1,3)(1,2).
+    """
+    keys = list(keys)
+    payloads = [list(p) for p in payloads]
+    for i, j in [(0, 1), (2, 3), (0, 2), (1, 3), (1, 2)]:
+        lt = keys[i] < keys[j]
+        keys[i], keys[j] = (jnp.where(lt, keys[i], keys[j]),
+                            jnp.where(lt, keys[j], keys[i]))
+        for p in payloads:
+            p[i], p[j] = jnp.where(lt, p[i], p[j]), jnp.where(lt, p[j], p[i])
+    return keys, payloads
+
+
+def select_dim(vx, vy, vz, k):
+    """TPU-native mux for per-lane dynamic dimension index k in {0,1,2}.
+
+    The RTL uses a 3-way mux; a per-lane gather would be slow on the VPU, so
+    we lower the same mux as two selects.
+    """
+    return jnp.where(k == 0.0, vx, jnp.where(k == 1.0, vy, vz))
+
+
+def ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m

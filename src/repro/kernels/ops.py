@@ -1,0 +1,221 @@
+"""Jit'd public wrappers for the Pallas kernels: typed I/O, padding, layout.
+
+The kernels speak the transposed row×lane layout; user code speaks the core
+pytrees (Ray/Box/Triangle/DatapathJob).  These wrappers pack/unpack and pad
+job counts to LANES multiples (padding jobs are benign: zero boxes, NaN-free)
+so every call site stays shape-agnostic.
+
+``interpret=True`` everywhere by default: this container is CPU-only; on a
+real TPU pass ``interpret=False`` and the same BlockSpecs lower to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.stream import DatapathJob, DatapathOutput
+from ..core.types import Box, QuadBoxResult, Ray, Triangle, TriangleResult
+from .common import (
+    LANES,
+    N_OPERAND_ROWS,
+    OUT_DOT,
+    OUT_EUCLID,
+    OUT_HIT,
+    OUT_IDX,
+    OUT_NORM,
+    OUT_RESET,
+    OUT_TDENOM,
+    OUT_THIT,
+    OUT_TMIN,
+    OUT_TNUM,
+    ROW_BOX_HI,
+    ROW_BOX_LO,
+    ROW_INV,
+    ROW_K,
+    ROW_MASK,
+    ROW_NEG,
+    ROW_ORG,
+    ROW_RESET,
+    ROW_SHEAR,
+    ROW_TRI_A,
+    ROW_VEC_A,
+    ROW_VEC_B,
+    ceil_to,
+)
+from .distance import angular_pallas, distance_pallas
+from .raybox import raybox_pallas
+from .raytri import raytri_pallas
+from .unified import unified_pallas
+
+
+def _pad_cols(x: jax.Array, n_to: int, value=0.0) -> jax.Array:
+    pad = n_to - x.shape[-1]
+    if pad == 0:
+        return x
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)], constant_values=value)
+
+
+# ---------------------------------------------------------------------------
+# OpQuadbox
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ray_box_kernel(ray: Ray, boxes: Box, *, interpret=True) -> QuadBoxResult:
+    """Kernel-backed ray-vs-4-AABB test.  ray fields (N,·); boxes (N,4,3)."""
+    n = ray.origin.shape[0]
+    n_pad = ceil_to(max(n, 1), LANES)
+    org = _pad_cols(ray.origin.T, n_pad)  # (3, N')
+    inv = _pad_cols(ray.inv.T, n_pad, 1.0)
+    neg = _pad_cols(jnp.signbit(ray.direction).astype(jnp.float32).T, n_pad)
+    lo = _pad_cols(boxes.lo.reshape(n, 12).T, n_pad)  # (12, N') rows: box-major
+    hi = _pad_cols(boxes.hi.reshape(n, 12).T, n_pad)
+    tmin, idx, hit = raybox_pallas(org, inv, neg, lo, hi, interpret=interpret)
+    return QuadBoxResult(tmin=tmin.T[:n], box_index=idx.T[:n],
+                         is_intersect=hit.T[:n].astype(bool))
+
+
+# ---------------------------------------------------------------------------
+# OpTriangle
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ray_triangle_kernel(ray: Ray, tri: Triangle, *, interpret=True) -> TriangleResult:
+    """Kernel-backed watertight ray-triangle test.  All batched (N, ·)."""
+    n = ray.origin.shape[0]
+    n_pad = ceil_to(max(n, 1), LANES)
+    org = _pad_cols(ray.origin.T, n_pad)
+    shear = _pad_cols(ray.shear.T, n_pad, 1.0)
+    k = _pad_cols(jnp.stack([ray.kx, ray.ky, ray.kz]).astype(jnp.float32), n_pad)
+    va = _pad_cols(tri.a.T, n_pad)
+    vb = _pad_cols(tri.b.T, n_pad)
+    vc = _pad_cols(tri.c.T, n_pad)
+    t_num, t_denom, hit = raytri_pallas(org, shear, k, va, vb, vc,
+                                        interpret=interpret)
+    return TriangleResult(t_num=t_num[0, :n], t_denom=t_denom[0, :n],
+                          hit=hit[0, :n].astype(bool))
+
+
+# ---------------------------------------------------------------------------
+# OpEuclidean / OpAngular (MXU batched form)
+# ---------------------------------------------------------------------------
+
+
+def _pad2d(x, bm, bk):
+    m, k = x.shape
+    return jnp.pad(x, ((0, ceil_to(m, bm) - m), (0, ceil_to(k, bk) - k)))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def euclidean_kernel(q, c, *, bm=128, bn=128, bk=128, interpret=True):
+    """Pairwise squared distances (M,D)x(N,D) -> (M,N), kernel-backed."""
+    m, n = q.shape[0], c.shape[0]
+    qp, cp = _pad2d(q, bm, bk), _pad2d(c, bn, bk)  # same D -> same padded K
+    out = distance_pallas(qp, cp, mode="euclidean", bm=bm, bn=bn, bk=bk,
+                          interpret=interpret)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def angular_kernel(q, c, *, bm=128, bn=128, bk=128, interpret=True):
+    """OpAngular batched: ((M,N) dots, (N,) norms), kernel-backed."""
+    m, n = q.shape[0], c.shape[0]
+    qp, cp = _pad2d(q, bm, bk), _pad2d(c, bn, bk)  # same D -> same padded K
+    dots, norms = angular_pallas(qp, cp, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return dots[:m, :n], norms[0, :n]
+
+
+# ---------------------------------------------------------------------------
+# Unified mixed-opcode stream
+# ---------------------------------------------------------------------------
+
+
+def pack_unified(jobs: DatapathJob) -> tuple[jax.Array, jax.Array]:
+    """Pack a (T, L) job grid into (opcodes (T,), operands (48, T*L)).
+
+    Beat t of lane-stream l lives at column t*LANES + l.  All lanes of a
+    tile share jobs.opcode[t, 0] (one opcode per beat, as the HW takes one
+    opcode per cycle).
+    """
+    t, l = jobs.opcode.shape
+    assert l == LANES, f"lane axis must be {LANES}, got {l}"
+    n = t * l
+
+    def rows(x, r0, nrows):  # x: (T, L, nrows) -> scatter into layout rows
+        return x.reshape(n, nrows).T, r0
+
+    operands = jnp.zeros((N_OPERAND_ROWS, n), jnp.float32)
+
+    def put(x, r0):
+        nrows = x.shape[0]
+        return operands.at[r0:r0 + nrows, :].set(x)
+
+    operands = put(jobs.ray.origin.reshape(n, 3).T, ROW_ORG)
+    # INV/SHEAR share rows; NEG/K share rows (union layout).  Quadbox tiles
+    # need inv+neg; triangle tiles need shear+k.  Select per tile.
+    is_tri = (jobs.opcode[:, :1] == 0)  # (T, 1)
+    inv_or_shear = jnp.where(is_tri[..., None], jobs.ray.shear, jobs.ray.inv)
+    operands = put(inv_or_shear.reshape(n, 3).T, ROW_INV)
+    kvec = jnp.stack([jobs.ray.kx, jobs.ray.ky, jobs.ray.kz], axis=-1).astype(jnp.float32)
+    neg = jnp.signbit(jobs.ray.direction).astype(jnp.float32)
+    operands = put(jnp.where(is_tri[..., None], kvec, neg).reshape(n, 3).T, ROW_NEG)
+
+    is_vec = (jobs.opcode[:, :1] >= 2)[..., None]  # (T,1,1)
+    box_lo = jobs.boxes.lo.reshape(t, l, 12)
+    box_hi = jobs.boxes.hi.reshape(t, l, 12)
+    tri_rows = jnp.concatenate(
+        [jobs.triangle.a, jobs.triangle.b, jobs.triangle.c], axis=-1)  # (T,L,9)
+    tri_rows = jnp.pad(tri_rows, ((0, 0), (0, 0), (0, 3)))
+    geo_lo = jnp.where(is_tri[..., None], tri_rows, box_lo)
+    # rows 9..24: box_lo(12)+pad / triangle(9)+pad / vec_a(16)
+    row_a = jnp.where(is_vec, jobs.vec_a,
+                      jnp.pad(geo_lo, ((0, 0), (0, 0), (0, 4))))
+    operands = put(row_a.reshape(n, 16).T, ROW_VEC_A)
+    # rows 25..40: box_hi(12)+pad / vec_b(16)
+    row_b = jnp.where(is_vec, jobs.vec_b,
+                      jnp.pad(box_hi, ((0, 0), (0, 0), (0, 4))))
+    operands = put(row_b.reshape(n, 16).T, ROW_VEC_B)
+
+    # Lane-validity mask encoded as a count (the kernel compares mask > i),
+    # which keeps it one row instead of 16.
+    mask_count = jobs.mask.astype(jnp.float32).sum(-1)
+    operands = put(mask_count.reshape(1, n), ROW_MASK)
+    operands = put(jobs.reset_accum.astype(jnp.float32).reshape(1, n), ROW_RESET)
+    return jobs.opcode[:, 0].astype(jnp.int32), operands
+
+
+def unpack_unified(opcodes: jax.Array, out: jax.Array, t: int) -> DatapathOutput:
+    """(16, T*L) kernel output -> DatapathOutput with (T, L) leaves."""
+    def row(r):
+        return out[r].reshape(t, LANES)
+
+    def rows4(r0):
+        return jnp.stack([out[r0 + i] for i in range(4)], -1).reshape(t, LANES, 4)
+
+    op = jnp.broadcast_to(opcodes[:, None], (t, LANES)).astype(jnp.int32)
+    return DatapathOutput(
+        opcode=op,
+        tmin=rows4(OUT_TMIN), box_index=rows4(OUT_IDX).astype(jnp.int32),
+        is_intersect=rows4(OUT_HIT) > 0.5,
+        t_num=row(OUT_TNUM), t_denom=row(OUT_TDENOM),
+        triangle_hit=row(OUT_THIT) > 0.5,
+        euclidean_accumulator=row(OUT_EUCLID),
+        angular_dot_product=row(OUT_DOT), angular_norm=row(OUT_NORM),
+        reset_accum=row(OUT_RESET) > 0.5,
+    )
+
+
+def unified_datapath(jobs: DatapathJob, *, interpret=True) -> DatapathOutput:
+    """Mixed-opcode stream through the unified kernel.
+
+    jobs: every leaf shaped (T, LANES, ...) — T beats of 128 lane-streams;
+    each beat carries one opcode (jobs.opcode[:, 0] is used).
+    """
+    t = jobs.opcode.shape[0]
+    opcodes, operands = pack_unified(jobs)
+    out = unified_pallas(opcodes, operands, interpret=interpret)
+    return unpack_unified(opcodes, out, t)

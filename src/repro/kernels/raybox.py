@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: OpQuadbox -- one ray vs four AABBs, 128 rays/tile.
+
+Layout: SoA transposed so the job batch is the lane axis.  Per grid step one
+``(rows, LANES)`` tile of rays+boxes is resident in VMEM; all arithmetic is
+VPU row ops; the quad-sort is the paper's 5-CAS network vectorised across
+lanes.  Stage structure (sub -> mul -> swap/minmax -> compare -> sort)
+follows Table VII's "Box" column; see ``repro/core/datapath.py`` for the
+stage-by-stage commentary.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import LANES, fmax_rows, fmin_rows, quadsort_rows
+
+
+def raybox_kernel(org_ref, inv_ref, neg_ref, lo_ref, hi_ref,
+                  tmin_ref, idx_ref, hit_ref):
+    """One tile: org/inv/neg (3, L); lo/hi (12, L) = 4 boxes x 3 dims."""
+    org = org_ref[...]
+    inv = inv_ref[...]
+    neg = neg_ref[...]  # 1.0 where direction sign bit set
+
+    tmins, tmaxs = [], []
+    for b in range(4):
+        lo = lo_ref[3 * b:3 * b + 3, :]
+        hi = hi_ref[3 * b:3 * b + 3, :]
+        # stage 2 (adders): translate planes; stage 3 (multipliers): slabs
+        t_lo = (lo - org) * inv
+        t_hi = (hi - org) * inv
+        # stage 4: sign swap + min/max trees with comparator NaN semantics
+        t_near = jnp.where(neg > 0.5, t_hi, t_lo)
+        t_far = jnp.where(neg > 0.5, t_lo, t_hi)
+        zero = jnp.zeros_like(t_near[0])
+        tmin = fmax_rows(t_near[2], fmax_rows(t_near[1], fmax_rows(t_near[0], zero)))
+        inf = jnp.full_like(tmin, jnp.inf)
+        tmax = fmin_rows(t_far[2], fmin_rows(t_far[1], fmin_rows(t_far[0], inf)))
+        tmins.append(tmin)
+        tmaxs.append(tmax)
+
+    # stage 5: intersect compares
+    hits = [(tmins[b] <= tmaxs[b]).astype(jnp.float32) for b in range(4)]
+    idxs = [jnp.full_like(tmins[0], float(b)) for b in range(4)]
+
+    # stage 10: two quad-sorting networks (values + indices), hits ride along
+    keys, (idx_s, hit_s) = quadsort_rows(tmins, [idxs, hits])
+
+    tmin_ref[...] = jnp.stack(keys)
+    idx_ref[...] = jnp.stack(idx_s).astype(jnp.int32)
+    hit_ref[...] = jnp.stack(hit_s).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def raybox_pallas(org, inv, neg, box_lo, box_hi, *, interpret=True):
+    """org/inv/neg: (3, N) f32; box_lo/hi: (12, N) f32.  N % LANES == 0.
+
+    Returns (tmin (4,N) f32, idx (4,N) i32, hit (4,N) i32), tmin sorted.
+    """
+    n = org.shape[1]
+    assert n % LANES == 0, n
+    grid = (n // LANES,)
+
+    def cols(r):
+        return lambda i: (0, i)
+
+    out_shape = (
+        jax.ShapeDtypeStruct((4, n), jnp.float32),
+        jax.ShapeDtypeStruct((4, n), jnp.int32),
+        jax.ShapeDtypeStruct((4, n), jnp.int32),
+    )
+    return pl.pallas_call(
+        raybox_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((3, LANES), cols(3)),
+            pl.BlockSpec((3, LANES), cols(3)),
+            pl.BlockSpec((3, LANES), cols(3)),
+            pl.BlockSpec((12, LANES), cols(12)),
+            pl.BlockSpec((12, LANES), cols(12)),
+        ],
+        out_specs=(
+            pl.BlockSpec((4, LANES), cols(4)),
+            pl.BlockSpec((4, LANES), cols(4)),
+            pl.BlockSpec((4, LANES), cols(4)),
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(org, inv, neg, box_lo, box_hi)

@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: OpTriangle -- watertight Woop test, 128 rays/tile.
+
+The RTL's per-job ``A[kx]`` crossbar becomes a per-lane 3-way select mux
+(:func:`repro.kernels.common.select_dim`) -- a gather would serialise on the
+VPU, a select is one lane op.  Stage structure follows Table VII's
+"Triangle" column.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import LANES, round_stage, select_dim
+
+
+def raytri_kernel(org_ref, shear_ref, k_ref, va_ref, vb_ref, vc_ref,
+                  tnum_ref, tdenom_ref, hit_ref):
+    """org/shear/k: (3, L); va/vb/vc: (3, L) vertices; outputs (1, L)."""
+    org = org_ref[...]
+    sx, sy, sz = shear_ref[0], shear_ref[1], shear_ref[2]
+    kx, ky, kz = k_ref[0], k_ref[1], k_ref[2]  # f32-encoded {0.,1.,2.}
+
+    # stage 2: translate vertices (9 adders)
+    a = va_ref[...] - org
+    b = vb_ref[...] - org
+    c = vc_ref[...] - org
+
+    def dims(v):
+        return (select_dim(v[0], v[1], v[2], kx),
+                select_dim(v[0], v[1], v[2], ky),
+                select_dim(v[0], v[1], v[2], kz))
+
+    a_kx, a_ky, a_kz = dims(a)
+    b_kx, b_ky, b_kz = dims(b)
+    c_kx, c_ky, c_kz = dims(c)
+
+    # stage 3: shear products (9 multipliers).  round_stage pins the paper's
+    # §III-D per-FU rounding between stages 3 and 4 (see common.py).
+    az = sz * a_kz
+    bz = sz * b_kz
+    cz = sz * c_kz
+    # stage 4: shear subtract (6 adders)
+    ax = a_kx - round_stage(sx * a_kz)
+    ay = a_ky - round_stage(sy * a_kz)
+    bx = b_kx - round_stage(sx * b_kz)
+    by = b_ky - round_stage(sy * b_kz)
+    cx = c_kx - round_stage(sx * c_kz)
+    cy = c_ky - round_stage(sy * c_kz)
+
+    # stages 5-6: edge functions (6 muls + 3 adds)
+    u = round_stage(cx * by) - round_stage(cy * bx)
+    v = round_stage(ax * cy) - round_stage(ay * cx)
+    w = round_stage(bx * ay) - round_stage(by * ax)
+
+    # stages 7-9: t_num / t_denom (3 muls + 4 adds)
+    t_denom = (u + v) + w
+    t_num = (round_stage(u * az) + round_stage(v * bz)) + round_stage(w * cz)
+
+    # stage 10: hit decision (5 comparators, culling variant)
+    hit = ((t_num > 0.0) & (t_denom != 0.0)
+           & (u >= 0.0) & (v >= 0.0) & (w >= 0.0))
+
+    tnum_ref[...] = t_num[None]
+    tdenom_ref[...] = t_denom[None]
+    hit_ref[...] = hit[None].astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def raytri_pallas(org, shear, k, va, vb, vc, *, interpret=True):
+    """All inputs (3, N) f32 (k holds kx/ky/kz as f32).  N % LANES == 0.
+
+    Returns (t_num (1,N) f32, t_denom (1,N) f32, hit (1,N) i32).
+    """
+    n = org.shape[1]
+    assert n % LANES == 0, n
+    grid = (n // LANES,)
+    spec3 = pl.BlockSpec((3, LANES), lambda i: (0, i))
+    spec1 = pl.BlockSpec((1, LANES), lambda i: (0, i))
+    out_shape = (
+        jax.ShapeDtypeStruct((1, n), jnp.float32),
+        jax.ShapeDtypeStruct((1, n), jnp.float32),
+        jax.ShapeDtypeStruct((1, n), jnp.int32),
+    )
+    return pl.pallas_call(
+        raytri_kernel,
+        grid=grid,
+        in_specs=[spec3] * 6,
+        out_specs=(spec1, spec1, spec1),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(org, shear, k, va, vb, vc)

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+Each oracle has the *same I/O signature* as its kernel wrapper in
+``ops.py`` but routes through ``repro.core`` — an independent, brute-force
+validated implementation (see tests/test_render.py's traversal-vs-bruteforce
+check).  Kernels are asserted allclose (usually bit-exact: both sides follow
+Table VII's association order in f32) against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.datapath import ray_box_test, ray_triangle_test
+from ..core.knn import angular_scores, euclidean_scores
+from ..core.stream import DatapathJob, DatapathOutput, unified_stream
+from ..core.types import Box, QuadBoxResult, Ray, Triangle, TriangleResult
+
+
+def ray_box_ref(ray: Ray, boxes: Box) -> QuadBoxResult:
+    return ray_box_test(ray, boxes)
+
+
+def ray_triangle_ref(ray: Ray, tri: Triangle) -> TriangleResult:
+    return ray_triangle_test(ray, tri)
+
+
+def euclidean_ref(q: jax.Array, c: jax.Array) -> jax.Array:
+    """Same MXU-form math as the kernel (norms-expansion), (M,N) f32."""
+    return euclidean_scores(q, c)
+
+
+def euclidean_direct_ref(q: jax.Array, c: jax.Array) -> jax.Array:
+    """The *paper's* form: sum_k (q-c)^2 directly (numerically strictest)."""
+    q = q.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    return jnp.sum((q[:, None, :] - c[None, :, :]) ** 2, axis=-1)
+
+
+def angular_ref(q: jax.Array, c: jax.Array):
+    dots, norms = angular_scores(q, c)
+    return dots, norms
+
+
+def unified_ref(jobs: DatapathJob) -> DatapathOutput:
+    """Per-lane-stream oracle: vmap the scalar in-order stream over lanes.
+
+    jobs leaves: (T, LANES, ...).  Lane l is an independent stream of T
+    in-order jobs — exactly the kernel's accumulator semantics.
+    """
+    def one_lane(lane_jobs):
+        _, out = unified_stream(lane_jobs)
+        return out
+
+    # move lane axis to front for vmap: (T, L, ...) -> (L, T, ...)
+    swapped = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), jobs)
+    out = jax.vmap(one_lane)(swapped)
+    return jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), out)

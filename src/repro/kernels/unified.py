@@ -1,0 +1,249 @@
+"""Pallas TPU kernel: the *unified* mixed-opcode datapath stream.
+
+This is the closest TPU analogue of the paper's top-level module: a single
+``pallas_call`` consumes an in-order stream of jobs tagged with a 2-bit
+opcode and produces the union output bundle, with per-mode accumulators that
+survive across the stream (Table V semantics).
+
+TPU adaptation (DESIGN.md §2)
+-----------------------------
+* The RTL pipelines jobs in *time* (II=1); the TPU kernel lays 128 parallel
+  job streams across VPU *lanes* and steps through "time" along the grid
+  axis: tile ``t`` holds beat ``t`` of every lane-stream.
+* The RTL's per-job opcode becomes a **scalar-prefetched** per-tile opcode
+  (``PrefetchScalarGridSpec``): the grid index maps to an opcode *before*
+  the tile's operands are touched, and ``jax.lax.switch`` selects the mode
+  datapath — so only one mode's FUs execute per tile, the time-sharing the
+  paper gets from feeding one opcode per cycle.
+* The per-mode accumulators are VMEM scratch rows that persist across grid
+  steps.  Resets/isolation follow Table V exactly: a mode's accumulator
+  only moves when a job of that mode passes, and ``reset`` clears only the
+  current mode's accumulator(s).
+* Operands arrive in the single union row layout of ``common.py`` — the
+  Chisel "one bundle type, dead fields optimized away" choice (§III-C);
+  Mosaic DCEs unread rows per opcode branch just like the RTL synthesizer.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import (
+    LANES,
+    N_OPERAND_ROWS,
+    N_OUTPUT_ROWS,
+    OUT_DOT,
+    OUT_EUCLID,
+    OUT_HIT,
+    OUT_IDX,
+    OUT_NORM,
+    OUT_RESET,
+    OUT_TDENOM,
+    OUT_THIT,
+    OUT_TMIN,
+    OUT_TNUM,
+    ROW_BOX_HI,
+    ROW_BOX_LO,
+    ROW_INV,
+    ROW_K,
+    ROW_MASK,
+    ROW_NEG,
+    ROW_ORG,
+    ROW_RESET,
+    ROW_SHEAR,
+    ROW_TRI_A,
+    ROW_TRI_B,
+    ROW_TRI_C,
+    ROW_VEC_A,
+    ROW_VEC_B,
+    fmax_rows,
+    fmin_rows,
+    quadsort_rows,
+    round_stage,
+    select_dim,
+)
+
+# Scratch rows: per-mode accumulators (euclid / angular-dot / angular-norm).
+ACC_EUCLID, ACC_DOT, ACC_NORM = 0, 1, 2
+N_ACC_ROWS = 8  # padded to f32 sublane tile
+
+
+def _zeros_out(out_ref):
+    out_ref[...] = jnp.zeros_like(out_ref)
+
+
+def _triangle_branch(operand_ref, out_ref, acc_ref):
+    """OpTriangle on a tile: Table VII 'Triangle' column (see raytri.py)."""
+    org = operand_ref[ROW_ORG:ROW_ORG + 3, :]
+    sx, sy, sz = (operand_ref[ROW_SHEAR, :], operand_ref[ROW_SHEAR + 1, :],
+                  operand_ref[ROW_SHEAR + 2, :])
+    kx, ky, kz = (operand_ref[ROW_K, :], operand_ref[ROW_K + 1, :],
+                  operand_ref[ROW_K + 2, :])
+    a = operand_ref[ROW_TRI_A:ROW_TRI_A + 3, :] - org  # stage 2
+    b = operand_ref[ROW_TRI_B:ROW_TRI_B + 3, :] - org
+    c = operand_ref[ROW_TRI_C:ROW_TRI_C + 3, :] - org
+
+    def dims(v):
+        return (select_dim(v[0], v[1], v[2], kx),
+                select_dim(v[0], v[1], v[2], ky),
+                select_dim(v[0], v[1], v[2], kz))
+
+    a_kx, a_ky, a_kz = dims(a)
+    b_kx, b_ky, b_kz = dims(b)
+    c_kx, c_ky, c_kz = dims(c)
+
+    az, bz, cz = sz * a_kz, sz * b_kz, sz * c_kz  # stage 3
+    ax = a_kx - round_stage(sx * a_kz)  # stages 3|4 rounding boundary (§III-D)
+    ay = a_ky - round_stage(sy * a_kz)
+    bx = b_kx - round_stage(sx * b_kz)
+    by = b_ky - round_stage(sy * b_kz)
+    cx = c_kx - round_stage(sx * c_kz)
+    cy = c_ky - round_stage(sy * c_kz)
+
+    u = round_stage(cx * by) - round_stage(cy * bx)  # stages 5-6
+    v = round_stage(ax * cy) - round_stage(ay * cx)
+    w = round_stage(bx * ay) - round_stage(by * ax)
+    t_denom = (u + v) + w  # stages 8-9
+    t_num = (round_stage(u * az) + round_stage(v * bz)) + round_stage(w * cz)
+
+    hit = ((t_num > 0.0) & (t_denom != 0.0)
+           & (u >= 0.0) & (v >= 0.0) & (w >= 0.0))  # stage 10
+
+    _zeros_out(out_ref)
+    out_ref[OUT_TNUM, :] = t_num
+    out_ref[OUT_TDENOM, :] = t_denom
+    out_ref[OUT_THIT, :] = hit.astype(jnp.float32)
+
+
+def _quadbox_branch(operand_ref, out_ref, acc_ref):
+    """OpQuadbox on a tile: Table VII 'Box' column (see raybox.py)."""
+    org = operand_ref[ROW_ORG:ROW_ORG + 3, :]
+    inv = operand_ref[ROW_INV:ROW_INV + 3, :]
+    neg = operand_ref[ROW_NEG:ROW_NEG + 3, :]
+
+    tmins, tmaxs = [], []
+    for bx in range(4):
+        lo = operand_ref[ROW_BOX_LO + 3 * bx:ROW_BOX_LO + 3 * bx + 3, :]
+        hi = operand_ref[ROW_BOX_HI + 3 * bx:ROW_BOX_HI + 3 * bx + 3, :]
+        t_lo = (lo - org) * inv  # stages 2-3
+        t_hi = (hi - org) * inv
+        t_near = jnp.where(neg > 0.5, t_hi, t_lo)  # stage 4
+        t_far = jnp.where(neg > 0.5, t_lo, t_hi)
+        zero = jnp.zeros_like(t_near[0])
+        tmin = fmax_rows(t_near[2], fmax_rows(t_near[1], fmax_rows(t_near[0], zero)))
+        inf = jnp.full_like(tmin, jnp.inf)
+        tmax = fmin_rows(t_far[2], fmin_rows(t_far[1], fmin_rows(t_far[0], inf)))
+        tmins.append(tmin)
+        tmaxs.append(tmax)
+
+    hits = [(tmins[b] <= tmaxs[b]).astype(jnp.float32) for b in range(4)]  # st. 5
+    idxs = [jnp.full_like(tmins[0], float(b)) for b in range(4)]
+    keys, (idx_s, hit_s) = quadsort_rows(tmins, [idxs, hits])  # stage 10
+
+    _zeros_out(out_ref)
+    for i in range(4):
+        out_ref[OUT_TMIN + i, :] = keys[i]
+        out_ref[OUT_IDX + i, :] = idx_s[i]
+        out_ref[OUT_HIT + i, :] = hit_s[i]
+
+
+def _euclidean_branch(operand_ref, out_ref, acc_ref):
+    """OpEuclidean beat: 16 masked lanes-of-dimension + stream accumulator."""
+    mask = operand_ref[ROW_MASK, :]
+    reset = operand_ref[ROW_RESET, :]
+    d = [(operand_ref[ROW_VEC_A + i, :] - operand_ref[ROW_VEC_B + i, :])
+         for i in range(16)]  # stage 2 (16 adders); mask = dead-lane zeroing
+    d = [jnp.where(mask > float(i), round_stage(di * di), 0.0)
+         for i, di in enumerate(d)]  # stage 3 (16 muls), §III-D boundary
+    d = [d[i] + d[i + 8] for i in range(8)]  # stage 4
+    d = [d[i] + d[i + 4] for i in range(4)]  # stage 6
+    d = [d[i] + d[i + 2] for i in range(2)]  # stage 8
+    partial = d[0] + d[1]  # stage 9
+
+    acc_in = jnp.where(reset > 0.5, 0.0, acc_ref[ACC_EUCLID, :])
+    out = partial + acc_in  # stage 10 (1 adder)
+    acc_ref[ACC_EUCLID, :] = out  # angular accumulators untouched (isolation)
+
+    _zeros_out(out_ref)
+    out_ref[OUT_EUCLID, :] = out
+    out_ref[OUT_RESET, :] = reset
+
+
+def _angular_branch(operand_ref, out_ref, acc_ref):
+    """OpAngular beat: 8 lanes (two multipliers each) + dual accumulators."""
+    mask = operand_ref[ROW_MASK, :]
+    reset = operand_ref[ROW_RESET, :]
+    dot, nrm = [], []
+    for i in range(8):
+        q = operand_ref[ROW_VEC_A + i, :]
+        c = operand_ref[ROW_VEC_B + i, :]
+        live = mask > float(i)
+        dot.append(jnp.where(live, round_stage(q * c), 0.0))  # stage 3
+        nrm.append(jnp.where(live, round_stage(c * c), 0.0))
+    dot = [dot[i] + dot[i + 4] for i in range(4)]  # stage 4
+    nrm = [nrm[i] + nrm[i + 4] for i in range(4)]
+    dot = [dot[i] + dot[i + 2] for i in range(2)]  # stage 6
+    nrm = [nrm[i] + nrm[i + 2] for i in range(2)]
+    dot_p = dot[0] + dot[1]  # stage 8
+    nrm_p = nrm[0] + nrm[1]
+
+    d_out = dot_p + jnp.where(reset > 0.5, 0.0, acc_ref[ACC_DOT, :])  # stage 9
+    n_out = nrm_p + jnp.where(reset > 0.5, 0.0, acc_ref[ACC_NORM, :])
+    acc_ref[ACC_DOT, :] = d_out
+    acc_ref[ACC_NORM, :] = n_out
+
+    _zeros_out(out_ref)
+    out_ref[OUT_DOT, :] = d_out
+    out_ref[OUT_NORM, :] = n_out
+    out_ref[OUT_RESET, :] = reset
+
+
+def unified_kernel(opcode_ref, operand_ref, out_ref, acc_ref):
+    """One tile = 128 lane-streams × one beat, mode picked by prefetched opcode."""
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():  # stream start: accumulators power up at zero
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    op = opcode_ref[t]
+    jax.lax.switch(
+        op,
+        [functools.partial(b, operand_ref, out_ref, acc_ref)
+         for b in (_triangle_branch, _quadbox_branch,
+                   _euclidean_branch, _angular_branch)],
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def unified_pallas(opcodes, operands, *, interpret=True):
+    """Run a mixed-opcode job stream through the unified datapath kernel.
+
+    opcodes:  (T,) i32 — one opcode per tile (beat) of 128 lane-streams.
+    operands: (T * N_OPERAND_ROWS?, no) — (N_OPERAND_ROWS, T * LANES) f32,
+              column ``t * LANES + l`` is beat t of lane-stream l, packed in
+              the union row layout of ``common.py``.
+    Returns (N_OUTPUT_ROWS, T * LANES) f32 in the union output layout.
+    """
+    rows, n = operands.shape
+    assert rows == N_OPERAND_ROWS and n % LANES == 0, operands.shape
+    t_tiles = n // LANES
+    assert opcodes.shape == (t_tiles,), (opcodes.shape, t_tiles)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(t_tiles,),
+        in_specs=[pl.BlockSpec((N_OPERAND_ROWS, LANES), lambda t, op: (0, t))],
+        out_specs=pl.BlockSpec((N_OUTPUT_ROWS, LANES), lambda t, op: (0, t)),
+        scratch_shapes=[pltpu.VMEM((N_ACC_ROWS, LANES), jnp.float32)],
+    )
+    return pl.pallas_call(
+        unified_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((N_OUTPUT_ROWS, n), jnp.float32),
+        interpret=interpret,
+    )(opcodes, operands)

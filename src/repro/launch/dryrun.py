@@ -1,0 +1,192 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST be the first two lines: jax locks the device count on first init.
+# The 512 placeholder host devices exist ONLY for this dry-run process.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the *production* step function (train_step /
+prefill / decode_step) with full published configs, shards every input with
+the rules in ``parallel.sharding``, lowers against ShapeDtypeStruct inputs
+(no allocation), compiles for the 16x16 (single-pod, 256 chips) and
+2x16x16 (multi-pod, 512 chips) meshes, and records:
+
+  memory_analysis()      -> bytes per device (proves it fits / doesn't)
+  cost_analysis()        -> HLO FLOPs / bytes (roofline inputs)
+  compiled.as_text()     -> collective schedule inventory (hlo_analysis)
+
+Failures (sharding mismatch, OOM at compile, unsupported collective) are
+bugs in the system — the record keeps the error so the table shows exactly
+what broke.
+
+Usage:
+  python -m repro.launch.dryrun --arch smollm-360m --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, applicable, get_config, input_specs
+from ..configs.registry import ARCH_IDS
+from ..models import (count_active_params, count_params, decode_step,
+                      init_params, prefill)
+from ..optim import adamw
+from ..parallel.sharding import make_rules
+from ..train import make_train_step
+from . import hlo_analysis as ha
+from .mesh import make_plan, make_production_mesh
+
+
+def params_shapes(cfg):
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def build_cell(cfg, shape, mesh, *, multi_pod: bool):
+    """Returns (fn, args, in_shardings, out_shardings, rules)."""
+    plan = make_plan(cfg, shape, multi_pod=multi_pod)
+    ctx = plan.ctx(mesh)
+    rules = make_rules(mesh, plan)
+    params_s = params_shapes(cfg)
+    psh = rules.params(params_s)
+
+    if shape.kind == "train":
+        (batch_s,) = input_specs(cfg, shape)
+        opt_cfg = adamw.AdamWConfig(moments_dtype=plan.moments_dtype)
+        opt_s = jax.eval_shape(
+            lambda: adamw.init(params_s, plan.moments_dtype))
+        osh = adamw.OptState(m=rules.opt_state(params_s),
+                             v=rules.opt_state(params_s),
+                             step=NamedSharding(mesh, P()))
+        bsh = rules.batch(batch_s)
+        fn = make_train_step(cfg, ctx, opt_cfg,
+                             accum_steps=plan.accum_steps)
+        # donate params+opt: the step updates them in place (production
+        # memory contract; halves the apparent footprint)
+        return (fn, (params_s, opt_s, batch_s), (psh, osh, bsh),
+                (psh, osh, None), rules, (0, 1))
+
+    if shape.kind == "prefill":
+        batch_s, cache_s = input_specs(cfg, shape)
+        bsh = rules.batch(batch_s)
+        csh = rules.cache(cache_s)
+
+        def fn(p, b, c):
+            return prefill(cfg, ctx, p, b, c)
+
+        return (fn, (params_s, batch_s, cache_s), (psh, bsh, csh),
+                (None, csh), rules, (2,))  # donate the cache
+
+    # decode
+    cache_s, tok_s = input_specs(cfg, shape)
+    csh = rules.cache(cache_s)
+    tsh = rules.batch({"tokens": tok_s})["tokens"]
+
+    def fn(p, c, t):
+        return decode_step(cfg, ctx, p, c, t)
+
+    return (fn, (params_s, cache_s, tok_s), (psh, csh, tsh), (None, csh),
+            rules, (1,))  # donate the cache: in-place KV update
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS for the cell (6ND train, 2ND per fwd token)."""
+    n_act = count_active_params(cfg)
+    if shape.kind == "train":
+        return 6.0 * n_act * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_act * shape.global_batch * shape.seq_len
+    return 2.0 * n_act * shape.global_batch  # decode: 1 token / sequence
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "kind": shape.kind, "ok": False,
+           "n_params": count_params(cfg),
+           "n_active_params": count_active_params(cfg),
+           "model_flops": model_flops(cfg, shape)}
+    if not applicable(cfg, shape):
+        rec["skipped"] = "long_500k needs sub-quadratic mixing (DESIGN.md)"
+        return rec
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        rec["chips"] = mesh.size
+        fn, args, in_sh, out_sh, rules, donate = build_cell(
+            cfg, shape, mesh, multi_pod=multi_pod)
+        t0 = time.time()
+        lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=donate).lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t0 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t0, 2)
+
+        mem = ha.memory_analysis_dict(compiled)
+        print(compiled.memory_analysis())  # proves it fits (or not)
+        cost = compiled.cost_analysis() or {}
+        print({k: cost.get(k) for k in ("flops", "bytes accessed")})
+        txt = compiled.as_text()
+        rec.update(
+            ok=True,
+            memory=mem,
+            hlo_flops=float(cost.get("flops", 0.0)),
+            hlo_bytes=float(cost.get("bytes accessed", 0.0)),
+            collectives=ha.collective_summary(txt),
+            n_while_loops=txt.count(" while("),
+            fallbacks=rules.fallbacks,
+        )
+    except Exception as e:  # recorded, not raised: the table shows the bug
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    cells = []
+    archs = ARCH_IDS if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                name = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+                print(f"=== {name} ===", flush=True)
+                rec = run_cell(arch, shape, multi_pod=mp)
+                path = os.path.join(args.out, name + ".json")
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = ("OK" if rec.get("ok")
+                          else rec.get("skipped") or rec.get("error", "?"))
+                print(f"--> {status} "
+                      f"(lower {rec.get('lower_s', '-')}s, "
+                      f"compile {rec.get('compile_s', '-')}s)", flush=True)
+                cells.append(rec)
+
+    n_ok = sum(1 for c in cells if c.get("ok"))
+    n_skip = sum(1 for c in cells if "skipped" in c)
+    print(f"\n{n_ok} ok / {n_skip} skipped-by-design / "
+          f"{len(cells) - n_ok - n_skip} FAILED of {len(cells)} cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+"""Post-SPMD HLO analysis: collective inventory and roofline terms.
+
+Parses ``compiled.as_text()`` (optimized, partitioned HLO) and sums the
+bytes each collective moves, deriving per-device link traffic under ring
+algorithms.  NOTE (measured, see DESIGN.md): both ``cost_analysis()`` and
+this text parse count a while-loop (lax.scan) body ONCE — the roofline
+harness therefore costs *unrolled per-layer bodies* and multiplies by the
+static repeat counts; the whole-program parse here is the collective
+*schedule* proof for the dry-run record.
+
+Hardware model (TPU v5e-like, per chip):
+  peak bf16 compute  197 TFLOP/s
+  HBM bandwidth      819 GB/s
+  ICI link bandwidth  50 GB/s (per link; 'pod' axis crossings use DCI and
+                      are reported separately)
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Optional
+
+PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
+HBM_BW = 819e9  # B/s per chip
+ICI_BW = 50e9  # B/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _type_bytes(type_str: str) -> int:
+    """Bytes of 'f32[32,64]{1,0}' or a '(t1, t2)' tuple string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    count: int = 0
+    result_bytes: int = 0  # per-device result tensor bytes, summed over ops
+    link_bytes: float = 0.0  # ring-model bytes over the busiest link
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Inventory of collective ops in (post-partitioning) HLO text.
+
+    Returns {op_kind: CollectiveStats}.  ``link_bytes`` uses ring-algorithm
+    per-device traffic: all-reduce 2B(S-1)/S, all-gather/all-to-all
+    B(S-1)/S, reduce-scatter B_in(S-1)/S, permute B.
+    """
+    stats: dict[str, CollectiveStats] = defaultdict(CollectiveStats)
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"(?:ROOT )?%[\w.\-]+ = ((?:\([^)]*\))|(?:\S+)) "
+                     r"([\w\-]+)(?:-start)?\(", stripped)
+        if not m:
+            continue
+        kind = m.group(2)
+        if kind.endswith("-start"):
+            kind = kind[:-6]
+        if kind not in _COLLECTIVES:
+            continue
+        rbytes = _type_bytes(m.group(1))
+        gm = _GROUPS_RE.search(stripped)
+        if gm:
+            group_size = int(gm.group(2))
+        else:
+            gb = _GROUPS_BRACE_RE.search(stripped)
+            group_size = (len(gb.group(1).split(",")) if gb else 1)
+        s = max(group_size, 1)
+        if kind == "all-reduce":
+            link = 2.0 * rbytes * (s - 1) / s
+        elif kind == "all-gather":
+            link = rbytes * (s - 1) / s  # result is the gathered tensor
+        elif kind == "reduce-scatter":
+            link = rbytes * (s - 1)  # result is the scattered shard
+        elif kind == "all-to-all":
+            link = rbytes * (s - 1) / s
+        else:  # collective-permute
+            link = float(rbytes)
+        st = stats[kind]
+        st.count += 1
+        st.result_bytes += rbytes
+        st.link_bytes += link
+    return dict(stats)
+
+
+def collective_summary(hlo_text: str) -> dict:
+    """JSON-friendly summary."""
+    stats = parse_collectives(hlo_text)
+    return {k: {"count": v.count, "result_bytes": v.result_bytes,
+                "link_bytes": v.link_bytes} for k, v in stats.items()}
+
+
+def total_link_bytes(hlo_text: str) -> float:
+    return sum(v.link_bytes for v in parse_collectives(hlo_text).values())
+
+
+def roofline_terms(flops: float, hbm_bytes: float, link_bytes: float,
+                   chips: int = 1) -> dict:
+    """The three roofline times in seconds (whole-step totals are per-device
+    already after SPMD, so ``chips`` stays 1 unless aggregating)."""
+    return {
+        "compute_s": flops / (chips * PEAK_FLOPS),
+        "memory_s": hbm_bytes / (chips * HBM_BW),
+        "collective_s": link_bytes / (chips * ICI_BW),
+    }
+
+
+def dominant_term(terms: dict) -> str:
+    return max(("compute_s", "memory_s", "collective_s"),
+               key=lambda k: terms[k])
+
+
+def memory_analysis_dict(compiled) -> Optional[dict]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return None
+    if ma is None:
+        return None
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    out = {k: int(getattr(ma, k, 0)) for k in keys}
+    out["total_bytes_per_device"] = (
+        out["argument_size_in_bytes"] + out["output_size_in_bytes"]
+        + out["temp_size_in_bytes"] - out["alias_size_in_bytes"])
+    return out

@@ -1,0 +1,61 @@
+"""Serving launcher: batched generation with the smoke (or full) config.
+
+``python -m repro.launch.serve --arch rwkv6-7b --batch 4 --new 32``
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.registry import ARCH_IDS, get_config, get_smoke
+from ..models import init_params
+from ..serving import Engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="smollm-360m")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch) if args.full else get_smoke(args.arch)
+    params = init_params(jax.random.PRNGKey(args.seed), cfg)
+    rng = np.random.default_rng(args.seed)
+
+    extra = {}
+    if cfg.family == "audio":
+        extra["frames"] = jnp.asarray(
+            rng.normal(size=(args.batch, cfg.encoder.seq_len, cfg.d_model)),
+            jnp.float32)
+    if cfg.family == "vlm":
+        extra["patches"] = jnp.asarray(
+            rng.normal(size=(args.batch, cfg.vision_tokens, cfg.d_model)),
+            jnp.float32)
+
+    eng = Engine(cfg, params, max_len=args.prompt_len + args.new + 8)
+    prompt = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
+        jnp.int32)
+
+    t0 = time.time()
+    out = eng.generate(prompt, max_new_tokens=args.new,
+                       temperature=args.temperature,
+                       rng=jax.random.PRNGKey(args.seed), extra_inputs=extra)
+    dt = time.time() - t0
+    toks = args.batch * args.new
+    print(f"arch={cfg.name} generated {out.shape} in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s incl. compile)")
+    print("sample:", np.asarray(out)[0][:16])
+
+
+if __name__ == "__main__":
+    main()

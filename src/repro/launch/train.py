@@ -1,0 +1,115 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On this CPU container it trains the *smoke* config of any arch end-to-end
+(synthetic data, checkpointing, fault-tolerant supervisor); on a real
+cluster the same entry point takes ``--full --mesh data,model`` and the
+production mesh.  Everything below the flag parsing is the deployable path:
+sharding rules, supervisor, async checkpoints.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES
+from ..configs.registry import ARCH_IDS, get_config, get_smoke
+from ..data import Prefetcher, SyntheticLM
+from ..models import init_params, count_params
+from ..optim import adamw
+from ..parallel.ctx import NO_PARALLEL
+from ..parallel.sharding import ParallelPlan, make_rules
+from ..runtime import Supervisor, SupervisorConfig
+from ..train import make_train_step
+
+
+def extra_data_specs(cfg):
+    out = {}
+    if cfg.family == "audio":
+        out["frames"] = ((cfg.encoder.seq_len, cfg.d_model), np.float32)
+    if cfg.family == "vlm":
+        out["patches"] = ((cfg.vision_tokens, cfg.d_model), np.float32)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="smollm-360m")
+    ap.add_argument("--full", action="store_true",
+                    help="full published config (needs a real cluster)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--mesh", default="",
+                    help="e.g. '2x4' -> axes (data, model)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch) if args.full else get_smoke(args.arch)
+    t_text = args.seq - cfg.vision_tokens if cfg.family == "vlm" else args.seq
+
+    if args.mesh:
+        dims = tuple(int(x) for x in args.mesh.split("x"))
+        axes = ("data", "model")[:len(dims)]
+        mesh = jax.make_mesh(dims, axes,
+                             axis_types=(jax.sharding.AxisType.Auto,) * len(dims))
+        plan = ParallelPlan(batch_axes=("data",),
+                            model_axis="model" if len(dims) > 1 else None)
+        ctx = plan.ctx(mesh)
+        rules = make_rules(mesh, plan)
+    else:
+        mesh = rules = None
+        ctx = NO_PARALLEL
+
+    print(f"arch={cfg.name} params={count_params(cfg):,} "
+          f"steps={args.steps} batch={args.batch}x{args.seq}")
+
+    params = init_params(jax.random.PRNGKey(args.seed), cfg)
+    opt_state = adamw.init(params)
+    shardings = None
+    if rules is not None:
+        psh = rules.params(params)
+        osh = adamw.OptState(rules.opt_state(params), rules.opt_state(params),
+                             NamedSharding(mesh, P()))
+        params = jax.device_put(params, psh)
+        opt_state = jax.device_put(opt_state, osh)
+        shardings = (psh, osh)
+
+    opt_cfg = adamw.AdamWConfig(lr=args.lr, warmup_steps=min(100, args.steps // 10 + 1),
+                                total_steps=args.steps)
+    step_fn = jax.jit(make_train_step(cfg, ctx, opt_cfg))
+
+    data = SyntheticLM(cfg.vocab_size, args.batch, t_text, seed=args.seed,
+                       extra_specs=extra_data_specs(cfg))
+    sup = Supervisor(
+        SupervisorConfig(ckpt_dir=os.path.join(args.ckpt_dir, cfg.name),
+                         ckpt_every=args.ckpt_every,
+                         heartbeat_path=os.path.join(args.ckpt_dir, "heartbeat")),
+        step_fn, Prefetcher(data), params, opt_state, shardings)
+
+    history = []
+
+    def log(step, metrics, dt):
+        if step % args.log_every == 0 or step == 1:
+            loss = float(metrics["loss"])
+            history.append({"step": step, "loss": loss, "dt": dt})
+            print(f"step {step:5d}  loss {loss:.4f}  "
+                  f"gnorm {float(metrics.get('grad_norm', 0)):.3f}  {dt*1e3:.0f}ms",
+                  flush=True)
+
+    sup.run(args.steps, metrics_cb=log)
+    print(f"done. restarts={sup.restarts} stragglers={len(sup.stragglers)}")
+    return history
+
+
+if __name__ == "__main__":
+    main()

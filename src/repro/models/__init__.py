@@ -1,0 +1,22 @@
+"""Model zoo: config-driven architectures (dense / MoE / hybrid / SSM /
+enc-dec / VLM) in pure functional JAX."""
+from .config import (  # noqa: F401
+    EncoderConfig,
+    LayerSpec,
+    MLAConfig,
+    MambaConfig,
+    ModelConfig,
+    MoEConfig,
+    RWKVConfig,
+    derive_segments,
+)
+from .model import (  # noqa: F401
+    cache_shapes,
+    count_active_params,
+    count_params,
+    decode_step,
+    init_cache,
+    init_params,
+    prefill,
+    train_loss,
+)

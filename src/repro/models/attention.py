@@ -1,0 +1,339 @@
+"""Attention mixers: GQA/MQA/MHA (chunked flash-style) and DeepSeek MLA.
+
+Two execution regimes share the math:
+
+* ``*_apply``  — full-sequence (training / prefill).  Causal attention runs
+  chunked with an online-softmax accumulator: q-chunks are a *python* loop
+  (so each q-chunk only scans the kv-chunks at or before it — no wasted
+  upper-triangle FLOPs, and the HLO stays small because the inner kv sweep
+  is a ``lax.scan``), keeping the (qc, kc) score tile bounded for 32k
+  prefill without a Pallas dependency.
+* ``*_decode`` — one new token against a cached KV of up to 512k tokens.
+  The cache layout is sharding-friendly: heads TP normally, sequence over
+  'data' for batch=1 long-context (ctx.kv_cache); softmax over a sharded
+  sequence axis lowers to the partial-max/partial-sum collective combine.
+
+MLA (DeepSeek-V3) caches the *compressed* latent (kv_lora + k_rope) and
+supports two decode paths: naive (expand k/v per step) and *absorbed*
+(fold W_uk into the query and W_uv into the output projection, attending in
+latent space) — the latter is the §Perf variant.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .config import MLAConfig, ModelConfig
+from .layers import apply_rope, dense_init, norm_apply, norm_init, split
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# chunked causal attention (online softmax), grouped heads
+# ---------------------------------------------------------------------------
+
+
+def _attend_chunk(q, k, v, bias):
+    """q (B,Tq,G,Hkv,hd), k (B,Tk,Hkv,hd), v (B,Tk,Hkv,hv) -> scores/update.
+
+    Returns (scores (B,G,Hkv,Tq,Tk) f32 pre-softmax with bias added).
+    """
+    s = jnp.einsum("btghd,bshd->bghts", q, k,
+                   preferred_element_type=jnp.float32)
+    return s + bias
+
+
+def chunked_causal_attention(q, k, v, *, chunk: int, causal: bool = True,
+                             kv_len=None, scale: float | None = None,
+                             unroll: bool = False):
+    """Flash-style attention.  q (B,T,Hq,hd), k/v (B,S,Hkv,hd|hv).
+
+    Hq must be a multiple of Hkv (GQA groups).  ``kv_len`` optionally masks
+    positions >= kv_len (ragged cache).  Returns (B,T,Hq,hv).
+    """
+    b, t, hq, hd = q.shape
+    hkv = k.shape[2]
+    hv = v.shape[-1]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    # pad q and kv to chunk multiples; padded kv columns are masked below.
+    qc = min(chunk, t)
+    kc = min(chunk, k.shape[1])
+    t_pad = -(-t // qc) * qc - t
+    s_pad = -(-k.shape[1] // kc) * kc - k.shape[1]
+    if kv_len is None and s_pad:
+        kv_len = k.shape[1]
+    if t_pad:
+        q = jnp.pad(q, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+    if s_pad:
+        k = jnp.pad(k, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
+    t_full, s_len = t + t_pad, k.shape[1]
+    qg = (q * scale).reshape(b, t_full, g, hkv, hd)
+    nq, nk = t_full // qc, s_len // kc
+
+    out = []
+    for i in range(nq):  # python loop: per-q-chunk static kv bound
+        qi = qg[:, i * qc:(i + 1) * qc]
+        # kv chunks 0..hi-1 (inclusive of the diagonal chunk when causal)
+        hi = min(((i + 1) * qc + kc - 1) // kc, nk) if causal else nk
+
+        @jax.checkpoint  # flash-style: recompute (qc,kc) scores in backward
+        def kv_step(carry, j):
+            m, l, acc = carry
+            kj = jax.lax.dynamic_slice_in_dim(k, j * kc, kc, axis=1)
+            vj = jax.lax.dynamic_slice_in_dim(v, j * kc, kc, axis=1)
+            pos_q = i * qc + jnp.arange(qc)
+            pos_k = j * kc + jnp.arange(kc)
+            bias = jnp.zeros((qc, kc), jnp.float32)
+            if causal:
+                bias = jnp.where(pos_q[:, None] >= pos_k[None, :], 0.0, NEG_INF)
+            if kv_len is not None:
+                bias = bias + jnp.where(pos_k[None, :] < kv_len, 0.0, NEG_INF)
+            s = _attend_chunk(qi, kj, vj, bias)  # (B,G,Hkv,qc,kc)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(-1)
+            pv = jnp.einsum("bghts,bshd->bghtd", p.astype(vj.dtype), vj,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * alpha[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, g, hkv, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, g, hkv, qc), jnp.float32)
+        a0 = jnp.zeros((b, g, hkv, qc, hv), jnp.float32)
+        if unroll:  # exact-HLO costing path (see config.attn_unroll)
+            carry = (m0, l0, a0)
+            for j in range(hi):
+                carry, _ = kv_step(carry, j)
+            m, l, acc = carry
+        else:
+            (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(hi))
+        o = acc / jnp.maximum(l, 1e-30)[..., None]  # (B,G,Hkv,qc,hv)
+        out.append(jnp.moveaxis(o, 3, 1).reshape(b, qc, hq, hv))
+    res = jnp.concatenate(out, axis=1) if len(out) > 1 else out[0]
+    return res[:, :t].astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, length, scale: float | None = None):
+    """Single-step attention: q (B,1,Hq,hd) vs cache (B,S,Hkv,hd|hv)."""
+    b, _, hq, hd = q.shape
+    s = k_cache.shape[1]
+    hkv = k_cache.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qg = (q * scale).reshape(b, 1, g, hkv, hd)
+    sc = jnp.einsum("btghd,bshd->bghts", qg, k_cache,
+                    preferred_element_type=jnp.float32)
+    mask = jnp.arange(s) < length  # (S,)
+    sc = jnp.where(mask[None, None, None, None, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bghts,bshd->bghtd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return jnp.moveaxis(o, 3, 1).reshape(b, 1, hq, v_cache.shape[-1]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA layer
+# ---------------------------------------------------------------------------
+
+
+def gqa_init(rng, cfg: ModelConfig):
+    d, h, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    ks = split(rng, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h, hd)),
+        "wk": dense_init(ks[1], (d, hkv, hd)),
+        "wv": dense_init(ks[2], (d, hkv, hd)),
+        "wo": dense_init(ks[3], (h, hd, d), in_axis=(0, 1)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), jnp.float32)
+        p["bk"] = jnp.zeros((hkv, hd), jnp.float32)
+        p["bv"] = jnp.zeros((hkv, hd), jnp.float32)
+    return p
+
+
+def _qkv(cfg, p, x, positions, rope=True):
+    dt = x.dtype
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(dt))
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"].astype(dt))
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if rope and cfg.pos_emb == "rope":
+        q = apply_rope(cfg, q, positions)
+        k = apply_rope(cfg, k, positions)
+    return q, k, v
+
+
+def gqa_apply(cfg: ModelConfig, ctx, p, x, positions, *, causal=True,
+              kv_override=None):
+    """Full-sequence GQA.  ``kv_override=(k, v)`` turns this into
+    cross-attention (whisper decoder -> encoder memory)."""
+    q, k, v = _qkv(cfg, p, x, positions, rope=kv_override is None)
+    if kv_override is not None:
+        k, v = kv_override
+    q = ctx.act_bthd(q)
+    k = ctx.act_bthd(k)
+    v = ctx.act_bthd(v)
+    o = chunked_causal_attention(q, k, v, chunk=cfg.attn_chunk, causal=causal,
+                                 unroll=cfg.attn_unroll)
+    o = ctx.act_bthd(o)
+    return jnp.einsum("bthk,hkd->btd", o, p["wo"].astype(x.dtype)), (k, v)
+
+
+def gqa_decode(cfg: ModelConfig, ctx, p, x, cache_k, cache_v, length):
+    """One-token decode.  x (B,1,D); cache (B,S,Hkv,hd); length () i32."""
+    pos = jnp.full((x.shape[0], 1), length, jnp.int32)
+    q, k, v = _qkv(cfg, p, x, pos)
+    cache_k = ctx.kv_cache(jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), length, axis=1))
+    cache_v = ctx.kv_cache(jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), length, axis=1))
+    o = decode_attention(q, cache_k, cache_v, length + 1)
+    return (jnp.einsum("bthk,hkd->btd", o, p["wo"].astype(x.dtype)),
+            cache_k, cache_v)
+
+
+def cross_attn_kv(cfg: ModelConfig, p, enc_h):
+    """Project encoder memory into this layer's cross k/v (cached at prefill)."""
+    dt = enc_h.dtype
+    k = jnp.einsum("btd,dhk->bthk", enc_h, p["wk"].astype(dt))
+    v = jnp.einsum("btd,dhk->bthk", enc_h, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    return k, v
+
+
+def cross_attn_apply(cfg: ModelConfig, ctx, p, x, kv):
+    """Decoder->encoder cross attention (non-causal, no rope)."""
+    dt = x.dtype
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+    k, v = kv
+    q = ctx.act_bthd(q)
+    o = chunked_causal_attention(q, k, v, chunk=cfg.attn_chunk, causal=False,
+                                 unroll=cfg.attn_unroll)
+    return jnp.einsum("bthk,hkd->btd", o, p["wo"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3): low-rank q/kv with decoupled rope, latent KV cache
+# ---------------------------------------------------------------------------
+
+
+def mla_init(rng, cfg: ModelConfig):
+    m: MLAConfig = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    ks = split(rng, 8)
+    return {
+        "wdq": dense_init(ks[0], (d, m.q_lora_rank)),
+        "q_norm": norm_init(cfg, m.q_lora_rank),
+        "wuq": dense_init(ks[1], (m.q_lora_rank, h, dn + dr)),
+        "wdkv": dense_init(ks[2], (d, m.kv_lora_rank + dr)),
+        "kv_norm": norm_init(cfg, m.kv_lora_rank),
+        "wuk": dense_init(ks[3], (m.kv_lora_rank, h, dn)),
+        "wuv": dense_init(ks[4], (m.kv_lora_rank, h, dv)),
+        "wo": dense_init(ks[5], (h, dv, d), in_axis=(0, 1)),
+    }
+
+
+def _mla_qkv(cfg, p, x, positions):
+    m: MLAConfig = cfg.mla
+    dn, dr = m.qk_nope_head_dim, m.qk_rope_head_dim
+    dt = x.dtype
+    cq = norm_apply(cfg, p["q_norm"], x @ p["wdq"].astype(dt))
+    q = jnp.einsum("btr,rhk->bthk", cq, p["wuq"].astype(dt))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(cfg, q_rope, positions)
+
+    dkv = x @ p["wdkv"].astype(dt)  # (B,T, kv_lora + dr)
+    c_kv = norm_apply(cfg, p["kv_norm"], dkv[..., :m.kv_lora_rank])
+    k_rope = apply_rope(cfg, dkv[..., None, m.kv_lora_rank:], positions)  # 1 head
+    return q_nope, q_rope, c_kv, k_rope[..., 0, :]
+
+
+def mla_apply(cfg: ModelConfig, ctx, p, x, positions, *, causal=True):
+    """Full-sequence MLA (training / prefill).  Returns (out, (c_kv, k_rope))."""
+    m: MLAConfig = cfg.mla
+    b, t, _ = x.shape
+    h = cfg.num_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(cfg, p, x, positions)
+
+    dt = x.dtype
+    k_nope = jnp.einsum("btr,rhk->bthk", c_kv, p["wuk"].astype(dt))
+    v = jnp.einsum("btr,rhk->bthk", c_kv, p["wuv"].astype(dt))
+    q = ctx.act_bthd(jnp.concatenate([q_nope, q_rope], axis=-1))
+    k = ctx.act_bthd(jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, t, h, dr))],
+        axis=-1))
+    v = ctx.act_bthd(v)
+    o = chunked_causal_attention(q, k, v, chunk=cfg.attn_chunk, causal=causal,
+                                 scale=1.0 / math.sqrt(dn + dr),
+                                 unroll=cfg.attn_unroll)
+    o = ctx.act_bthd(o)
+    return jnp.einsum("bthk,hkd->btd", o, p["wo"].astype(dt)), (c_kv, k_rope)
+
+
+def mla_decode(cfg: ModelConfig, ctx, p, x, cache_ckv, cache_krope, length):
+    """One-token MLA decode over the *latent* cache (B,S,kv_lora)+(B,S,dr).
+
+    ``cfg.mla.absorb`` switches between the naive path (expand k/v for all
+    cached positions each step — memory-light, compute-heavy) and the
+    absorbed path (attend in latent space; W_uk folded into q, W_uv folded
+    into the output) — the MLA trick that makes the latent cache *cheaper*
+    to attend to than a materialized one.
+    """
+    m: MLAConfig = cfg.mla
+    b = x.shape[0]
+    h = cfg.num_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    pos = jnp.full((b, 1), length, jnp.int32)
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qkv(cfg, p, x, pos)
+    cache_ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache_ckv, c_kv_new.astype(cache_ckv.dtype), length, axis=1)
+    cache_krope = jax.lax.dynamic_update_slice_in_dim(
+        cache_krope, k_rope_new.astype(cache_krope.dtype), length, axis=1)
+    s_max = cache_ckv.shape[1]
+    dt = x.dtype
+    mask = (jnp.arange(s_max) < length + 1)
+
+    scale = 1.0 / math.sqrt(dn + dr)
+    if m.absorb:
+        # q' = q_nope @ W_uk  -> latent-space query (B,1,H,R)
+        q_lat = jnp.einsum("bthk,rhk->bthr", q_nope, p["wuk"].astype(dt))
+        s_lat = jnp.einsum("bthr,bsr->bhts", q_lat, cache_ckv.astype(dt),
+                           preferred_element_type=jnp.float32)
+        s_rope = jnp.einsum("bthk,bsk->bhts", q_rope, cache_krope.astype(dt),
+                            preferred_element_type=jnp.float32)
+        sc = (s_lat + s_rope) * scale
+        sc = jnp.where(mask[None, None, None, :], sc, NEG_INF)
+        pby = jax.nn.softmax(sc, axis=-1)
+        o_lat = jnp.einsum("bhts,bsr->bthr", pby.astype(dt), cache_ckv.astype(dt),
+                           preferred_element_type=jnp.float32).astype(dt)
+        # out = (o_lat @ W_uv) @ W_o  == o_lat @ (W_uv·W_o)  (absorbable)
+        o = jnp.einsum("bthr,rhk->bthk", o_lat, p["wuv"].astype(dt))
+    else:
+        k_nope = jnp.einsum("bsr,rhk->bshk", cache_ckv.astype(dt),
+                            p["wuk"].astype(dt))
+        v = jnp.einsum("bsr,rhk->bshk", cache_ckv.astype(dt),
+                       p["wuv"].astype(dt))
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(cache_krope[:, :, None, :].astype(dt),
+                                      k_nope.shape[:3] + (dr,))], axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        o = decode_attention(q, k, v, length + 1, scale=scale)
+    out = jnp.einsum("bthk,hkd->btd", o, p["wo"].astype(dt))
+    return out, cache_ckv, cache_krope

@@ -1,0 +1,217 @@
+"""Shared neural layers: norms, RoPE, embeddings, MLPs, chunked LM loss.
+
+Pure functional style: ``*_init(rng, ...) -> params`` and
+``*_apply(params, x, ...) -> y``.  Params are plain dicts of jax arrays so
+the whole model is a pytree that pjit/scan/checkpoint handle natively.
+Compute runs in ``cfg.compute_dtype`` (bf16 by default) with f32 master
+params and f32 reductions (norms, softmax, loss).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(rng, shape, in_axis=0, dtype=jnp.float32, scale=1.0):
+    """Fan-in scaled truncated-normal init (maps well to all archs here)."""
+    fan_in = (shape[in_axis] if isinstance(in_axis, int)
+              else math.prod(shape[a] for a in in_axis))
+    std = scale / math.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(rng, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def split(rng, n):
+    return list(jax.random.split(rng, n))
+
+
+# ---------------------------------------------------------------------------
+# normalization
+# ---------------------------------------------------------------------------
+
+
+def norm_init(cfg: ModelConfig, d=None):
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def norm_apply(cfg: ModelConfig, p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:  # rmsnorm
+        ms = (xf * xf).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary / sinusoidal positions
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(cfg: ModelConfig, head_dim: int) -> jax.Array:
+    """Inverse frequencies for the rotated sub-dimension."""
+    rot = int(head_dim * cfg.rope_fraction) // 2 * 2
+    return 1.0 / (cfg.rope_theta ** (jnp.arange(0, rot, 2, jnp.float32) / rot))
+
+
+def apply_rope(cfg: ModelConfig, x: jax.Array, positions: jax.Array) -> jax.Array:
+    """Rotate the first ``rope_fraction`` of head_dim; pass the rest through.
+
+    x: (B, T, H, hd); positions: (B, T) or (T,).
+    ``rope_fraction=0.5`` reproduces ChatGLM's 2d/partial rotary,
+    ``1.0`` the llama-family full rotary.
+    """
+    hd = x.shape[-1]
+    rot = int(hd * cfg.rope_fraction) // 2 * 2
+    if rot == 0:
+        return x
+    inv = rope_freqs(cfg, hd)
+    pos = positions.astype(jnp.float32)
+    ang = pos[..., None] * inv  # (..., T, rot/2)
+    if ang.ndim == 2:  # (T, r) -> broadcast batch
+        ang = ang[None]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    xr = x[..., :rot].astype(jnp.float32)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([r1, r2], axis=-1).reshape(x.shape[:-1] + (rot,))
+    return jnp.concatenate([rotated.astype(x.dtype), x[..., rot:]], axis=-1)
+
+
+def sinusoidal_pos(length: int, d_model: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings (length, d_model)."""
+    half = d_model // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                    / max(half - 1, 1))
+    args = jnp.arange(length, dtype=jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(args), jnp.cos(args)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated SwiGLU or plain)
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(rng, cfg: ModelConfig, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = split(rng, 3)
+    p = {"wi": dense_init(ks[0], (d, f)), "wo": dense_init(ks[1], (f, d))}
+    if cfg.mlp_gated:
+        p["wg"] = dense_init(ks[2], (d, f))
+    return p
+
+
+def _act(cfg: ModelConfig, x):
+    if cfg.act == "silu":
+        return jax.nn.silu(x)
+    if cfg.act == "gelu":
+        return jax.nn.gelu(x)
+    if cfg.act == "relu_sq":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(cfg.act)
+
+
+def mlp_apply(cfg: ModelConfig, ctx, p, x):
+    dt = x.dtype
+    h = x @ p["wi"].astype(dt)
+    if cfg.mlp_gated:
+        h = _act(cfg, x @ p["wg"].astype(dt)) * h
+    else:
+        h = _act(cfg, h)
+    h = ctx.act_btf(h)
+    return h @ p["wo"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# embeddings + chunked LM loss
+# ---------------------------------------------------------------------------
+
+
+def embed_init(rng, cfg: ModelConfig):
+    p = {"tok": dense_init(rng, (cfg.vocab_size, cfg.d_model), in_axis=1)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(
+            jax.random.fold_in(rng, 1), (cfg.d_model, cfg.vocab_size))
+    return p
+
+
+def embed_apply(cfg: ModelConfig, p, tokens):
+    return p["tok"].astype(jnp.dtype(cfg.compute_dtype))[tokens]
+
+
+def unembed_matrix(cfg: ModelConfig, p):
+    return (p["tok"].T if cfg.tie_embeddings else p["unembed"])
+
+
+def logits_apply(cfg: ModelConfig, ctx, p, h):
+    w = unembed_matrix(cfg, p).astype(h.dtype)
+    return ctx.act_btv(h @ w)
+
+
+def lm_loss(cfg: ModelConfig, ctx, embed_params, h, labels, mask=None,
+            z_weight=1e-4):
+    """Chunked softmax cross-entropy (+ z-loss) over the sequence.
+
+    h: (B, T, D) final hidden; labels: (B, T) int32 (-1 = ignore).
+    Chunking over T bounds the (B, c, V) logits tensor — with V up to 129k
+    (deepseek) full-sequence logits would dominate activation memory.
+    """
+    b, t, d = h.shape
+    c = min(cfg.logit_chunk, t)
+    n_chunks = -(-t // c)
+    pad = n_chunks * c - t
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+        if mask is not None:
+            mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    hc = jnp.moveaxis(h.reshape(b, n_chunks, c, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, n_chunks, c), 1, 0)
+    mc = (jnp.moveaxis(mask.reshape(b, n_chunks, c), 1, 0)
+          if mask is not None else jnp.ones_like(lc, jnp.float32))
+    w = unembed_matrix(cfg, embed_params)
+
+    @jax.checkpoint  # recompute (B,c,V) logits in backward: O(B·c·D) saved
+    def chunk_body(hx, lx, mx):
+        logits = ctx.act_btv(hx @ w.astype(hx.dtype)).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(
+            logits, jnp.maximum(lx, 0)[..., None], axis=-1)[..., 0]
+        valid = (lx >= 0).astype(jnp.float32) * mx
+        nll = (lse - ll) * valid
+        zl = z_weight * (lse ** 2) * valid
+        return nll.sum(), valid.sum(), zl.sum()
+
+    def chunk_loss(carry, xs):
+        hx, lx, mx = xs
+        nll, valid, zl = chunk_body(hx, lx, mx)
+        tot, cnt, z = carry
+        return (tot + nll, cnt + valid, z + zl), None
+
+    init = (jnp.float32(0), jnp.float32(0), jnp.float32(0))
+    if cfg.scan_seq:
+        (tot, cnt, z), _ = jax.lax.scan(chunk_loss, init, (hc, lc, mc))
+    else:  # exact-HLO costing path: python-unrolled chunks
+        carry = init
+        for i in range(n_chunks):
+            carry, _ = chunk_loss(carry, (hc[i], lc[i], mc[i]))
+        tot, cnt, z = carry
+    cnt = jnp.maximum(cnt, 1.0)
+    return tot / cnt, {"nll": tot / cnt, "z_loss": z / cnt, "tokens": cnt}

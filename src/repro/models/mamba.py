@@ -1,0 +1,174 @@
+"""Mamba (selective SSM) mixer — the Jamba hybrid's attention-free layer.
+
+TPU mapping: the recurrence h_t = Ā_t h_{t-1} + B̄_t x_t is diagonal over
+(d_inner, d_state), so it parallelises as an *associative scan* within
+time-chunks (tree combine on the VPU — materialising (B, chunk, d, N)
+tiles in VMEM-sized pieces) with a tiny (B, d, N) carry scanned across
+chunks.  That keeps HLO small (one while loop over T/chunk) while the
+inside of each chunk is straight-line vector code.  ``cfg.scan_seq=False``
+python-unrolls the chunk loop for the exact-HLO costing path.
+
+Jamba details reproduced: RMSNorm on the dt/B/C projections, silu-gated
+output, conv1d causal depthwise frontend (d_conv=4), softplus dt with
+learned bias, S4D-real A init.  TP: d_inner is sharded over the model axis
+(all per-channel ops shard cleanly; in/out projections are column/row
+parallel).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .config import MambaConfig, ModelConfig
+from .layers import dense_init, norm_apply, split
+
+
+def mamba_dims(cfg: ModelConfig):
+    m: MambaConfig = cfg.mamba
+    d_inner = m.expand * cfg.d_model
+    return d_inner, m.d_state, cfg.dt_rank_
+
+
+def mamba_init(rng, cfg: ModelConfig):
+    m: MambaConfig = cfg.mamba
+    d = cfg.d_model
+    d_in, n, dt_rank = mamba_dims(cfg)
+    ks = split(rng, 8)
+    # S4D-real A init: A[d, n] = -(1..n)
+    a = jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (d_in, n))
+    dt_bias = jnp.log(jnp.expm1(jnp.full((d_in,), 0.01, jnp.float32)))  # softplus^-1
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_in)),
+        "conv_w": dense_init(ks[1], (m.d_conv, d_in), in_axis=0),
+        "conv_b": jnp.zeros((d_in,), jnp.float32),
+        "x_proj": dense_init(ks[2], (d_in, dt_rank + 2 * n)),
+        "dt_proj": dense_init(ks[3], (dt_rank, d_in), scale=dt_rank ** -0.5),
+        "dt_bias": dt_bias,
+        "a_log": jnp.log(a),
+        "d_skip": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[4], (d_in, d)),
+        "dt_norm": {"scale": jnp.ones((dt_rank,), jnp.float32)},
+        "b_norm": {"scale": jnp.ones((n,), jnp.float32)},
+        "c_norm": {"scale": jnp.ones((n,), jnp.float32)},
+    }
+
+
+def _conv1d(p, x, conv_state=None):
+    """Causal depthwise conv over time.  x (B,T,Din); state (B,K-1,Din)."""
+    k = p["conv_w"].shape[0]
+    if conv_state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * p["conv_w"][i].astype(x.dtype)
+            for i in range(k))
+    new_state = xp[:, -(k - 1):, :] if k > 1 else xp[:, :0, :]
+    return y + p["conv_b"].astype(x.dtype), new_state
+
+
+def _ssm_params(cfg: ModelConfig, p, xc):
+    """From conv'd activations to (dt, B, C) with Jamba's inner RMSNorms."""
+    _, n, dt_rank = mamba_dims(cfg)
+    dt = x_dbc = xc @ p["x_proj"].astype(xc.dtype)
+    dt = x_dbc[..., :dt_rank]
+    b = x_dbc[..., dt_rank:dt_rank + n]
+    c = x_dbc[..., dt_rank + n:]
+    dt = norm_apply(cfg, p["dt_norm"], dt)
+    b = norm_apply(cfg, p["b_norm"], b)
+    c = norm_apply(cfg, p["c_norm"], c)
+    dt = jax.nn.softplus(dt @ p["dt_proj"].astype(dt.dtype)
+                         + p["dt_bias"].astype(dt.dtype))  # (B,T,Din) f32
+    return dt.astype(jnp.float32), b.astype(jnp.float32), c.astype(jnp.float32)
+
+
+def _chunk_scan(a_c, bx_c, h0):
+    """Associative scan within one chunk.
+
+    a_c, bx_c: (B, c, Din, N); h0: (B, Din, N).
+    Returns (h_all (B, c, Din, N), h_end).  h_t = a_t h_{t-1} + bx_t.
+    """
+    def combine(l, r):
+        (a1, m1), (a2, m2) = l, r
+        return a1 * a2, a2 * m1 + m2
+
+    a_cum, m_cum = jax.lax.associative_scan(combine, (a_c, bx_c), axis=1)
+    h_all = a_cum * h0[:, None] + m_cum
+    return h_all, h_all[:, -1]
+
+
+def selective_scan(cfg: ModelConfig, dt, b, c, xc, p, h0=None):
+    """The selective SSM.  dt (B,T,Din) f32, b/c (B,T,N), xc (B,T,Din).
+
+    Returns (y (B,T,Din), h_end (B,Din,N)).
+    """
+    m: MambaConfig = cfg.mamba
+    bsz, t, d_in = dt.shape
+    n = b.shape[-1]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (Din, N)
+    if h0 is None:
+        h0 = jnp.zeros((bsz, d_in, n), jnp.float32)
+
+    chunk = min(m.chunk, t)
+    pad = -(-t // chunk) * chunk - t
+    if pad:
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        xc = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+    nt = (t + pad) // chunk
+
+    @jax.checkpoint  # recompute the (B,c,Din,N) chunk tensors in backward
+    def chunk_step(h, idx):
+        sl = lambda z: jax.lax.dynamic_slice_in_dim(z, idx * chunk, chunk, 1)
+        dt_c, b_c, c_c, x_c = sl(dt), sl(b), sl(c), sl(xc).astype(jnp.float32)
+        a_c = jnp.exp(dt_c[..., None] * a)  # (B,c,Din,N)  Ā = exp(Δ A)
+        bx_c = (dt_c * x_c)[..., None] * b_c[:, :, None, :]  # B̄x = Δ B x
+        h_all, h_end = _chunk_scan(a_c, bx_c, h)
+        y_c = jnp.einsum("bcdn,bcn->bcd", h_all, c_c)  # y = C·h
+        return h_end, y_c
+
+    if cfg.scan_seq:
+        h_end, ys = jax.lax.scan(chunk_step, h0, jnp.arange(nt))
+        y = jnp.moveaxis(ys, 0, 1).reshape(bsz, nt * chunk, d_in)
+    else:  # exact-HLO costing path
+        h, parts = h0, []
+        for i in range(nt):
+            h, y_c = chunk_step(h, i)
+            parts.append(y_c)
+        h_end = h
+        y = jnp.concatenate(parts, axis=1)
+    y = y[:, :t] + xc.astype(jnp.float32)[:, :t] * p["d_skip"]
+    return y, h_end
+
+
+def mamba_apply(cfg: ModelConfig, ctx, p, x, ssm_state=None, conv_state=None):
+    """Full-sequence Mamba mixer.  x (B,T,D) -> (y, (conv_state, ssm_state))."""
+    dt_ = x.dtype
+    xz = x @ p["in_proj"].astype(dt_)  # (B,T,2Din)
+    d_in = xz.shape[-1] // 2
+    x_in, z = xz[..., :d_in], xz[..., d_in:]
+    x_in = ctx.act_btf(x_in)
+    z = ctx.act_btf(z)
+    xc, conv_state = _conv1d(p, x_in, conv_state)
+    xc = jax.nn.silu(xc)
+    dt, b, c = _ssm_params(cfg, p, xc)
+    y, h_end = selective_scan(cfg, dt, b, c, xc, p, ssm_state)
+    y = (y.astype(dt_) * jax.nn.silu(z))
+    y = ctx.act_btf(y)
+    return y @ p["out_proj"].astype(dt_), (conv_state, h_end)
+
+
+def mamba_decode(cfg: ModelConfig, ctx, p, x, conv_state, ssm_state):
+    """Single-token step.  x (B,1,D); conv_state (B,K-1,Din) bf16;
+    ssm_state (B,Din,N) f32."""
+    y, (conv_state, h) = mamba_apply(
+        cfg, ctx, p, x, ssm_state=ssm_state, conv_state=conv_state)
+    return y, conv_state.astype(conv_state.dtype), h
+
+
+def mamba_state_shapes(cfg: ModelConfig, batch: int):
+    m: MambaConfig = cfg.mamba
+    d_in, n, _ = mamba_dims(cfg)
+    return ((batch, m.d_conv - 1, d_in), (batch, d_in, n))

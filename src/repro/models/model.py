@@ -1,0 +1,298 @@
+"""Public model API: init / train_loss / prefill / decode_step / init_cache.
+
+Handles per-family input assembly:
+  LM (dense/moe/hybrid/ssm):  batch = {tokens, labels}
+  audio (whisper enc-dec):    batch = {frames (stub embeddings), tokens, labels}
+  vlm (internvl2):            batch = {patches (stub embeddings), tokens, labels}
+
+Caches are dicts: {"segs": [per-segment stacked block caches], "len": i32,
+optionally "enc_h" for enc-dec}.  Everything is a pytree — pjit, scan,
+checkpointing and the dry-run all treat models uniformly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, derive_segments
+from .layers import (embed_apply, embed_init, lm_loss, logits_apply,
+                     norm_apply, norm_init, sinusoidal_pos, dense_init, split)
+from .transformer import (block_apply, block_init, stack_apply, stack_cache_shapes,
+                          stack_init)
+from .config import LayerSpec
+from .moe import count_moe_params
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_params(rng, cfg: ModelConfig):
+    ks = split(rng, 6)
+    params: dict[str, Any] = {
+        "embed": embed_init(ks[0], cfg),
+        "segments": stack_init(ks[1], cfg, cross=cfg.encoder is not None),
+        "final_norm": norm_init(cfg),
+    }
+    if cfg.encoder is not None:
+        enc_cfg = encoder_cfg(cfg)
+        params["encoder"] = {
+            "segments": stack_init(ks[2], enc_cfg),
+            "final_norm": norm_init(enc_cfg),
+        }
+    if cfg.mtp_depth > 0:
+        params["mtp"] = {
+            "proj": dense_init(ks[3], (2 * cfg.d_model, cfg.d_model)),
+            "norm_h": norm_init(cfg),
+            "norm_e": norm_init(cfg),
+            "block": jax.tree.map(
+                lambda x: x[None],
+                block_init(ks[4], cfg, LayerSpec(mixer="attn", moe=False))),
+            "final_norm": norm_init(cfg),
+        }
+    return params
+
+
+def encoder_cfg(cfg: ModelConfig) -> ModelConfig:
+    """Derived config for the (bidirectional) encoder tower."""
+    import dataclasses
+    return dataclasses.replace(
+        cfg, num_layers=cfg.encoder.num_layers, layer_pattern=("attn",),
+        moe_pattern=(False,), encoder=None, mtp_depth=0,
+        pos_emb="sinusoidal", causal=False)
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(cfg: ModelConfig, ctx, params, batch):
+    """Token / stub-frontend embedding assembly.  Returns (h, labels, positions)."""
+    if cfg.family == "vlm":
+        tok = embed_apply(cfg, params["embed"], batch["tokens"])
+        h = jnp.concatenate(
+            [batch["patches"].astype(tok.dtype), tok], axis=1)
+        labels = batch.get("labels")
+        if labels is not None:
+            # loss only over text positions; vision positions ignored
+            pad = jnp.full(batch["patches"].shape[:2], -1, labels.dtype)
+            labels = jnp.concatenate([pad, labels], axis=1)
+    else:
+        h = embed_apply(cfg, params["embed"], batch["tokens"])
+        labels = batch.get("labels")
+    t = h.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), h.shape[:2])
+    if cfg.pos_emb == "sinusoidal":
+        h = h + sinusoidal_pos(t, cfg.d_model).astype(h.dtype)
+    return ctx.act_btd(h), labels, positions
+
+
+def _encode(cfg: ModelConfig, ctx, params, batch):
+    """Encoder tower over stub frame embeddings (whisper)."""
+    ecfg = encoder_cfg(cfg)
+    frames = batch["frames"].astype(jnp.dtype(cfg.compute_dtype))
+    h = frames + sinusoidal_pos(frames.shape[1], cfg.d_model).astype(frames.dtype)
+    h = ctx.act_btd(h)
+    pos = jnp.broadcast_to(
+        jnp.arange(h.shape[1], dtype=jnp.int32), h.shape[:2])
+    h, _, _ = stack_apply(ecfg, ctx, params["encoder"]["segments"], h, pos,
+                          "train")
+    return norm_apply(ecfg, params["encoder"]["final_norm"], h)
+
+
+def forward(cfg: ModelConfig, ctx, params, batch, mode="train", caches=None):
+    """Backbone forward.  Returns (h_final, labels, aux, new_caches, enc_h)."""
+    enc_h = None
+    if cfg.encoder is not None:
+        enc_h = (caches or {}).get("enc_h")
+        if enc_h is None:
+            enc_h = _encode(cfg, ctx, params, batch)
+    h, labels, positions = _embed_inputs(cfg, ctx, params, batch)
+    segs_cache = caches["segs"] if caches is not None else None
+    length = caches["len"] if caches is not None else None
+    h, new_segs, aux = stack_apply(cfg, ctx, params["segments"], h, positions,
+                                   mode, segs_cache, length, enc_h)
+    h = norm_apply(cfg, params["final_norm"], h)
+    return h, labels, aux, new_segs, enc_h
+
+
+def train_loss(cfg: ModelConfig, ctx, params, batch, aux_weight=0.01):
+    """Scalar loss + metrics.  batch per family docstring."""
+    h, labels, aux, _, _ = forward(cfg, ctx, params, batch, mode="train")
+    loss, metrics = lm_loss(cfg, ctx, params["embed"], h, labels)
+    if cfg.mtp_depth > 0:
+        mtp_loss = _mtp_loss(cfg, ctx, params, h, batch, labels)
+        loss = loss + cfg.mtp_weight * mtp_loss
+        metrics["mtp"] = mtp_loss
+    n_moe = sum(1 for s in cfg.layer_specs() if s.moe)
+    if n_moe:
+        aux = aux / n_moe
+        loss = loss + aux_weight * aux
+        metrics["moe_aux"] = aux
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def _mtp_loss(cfg: ModelConfig, ctx, params, h, batch, labels):
+    """DeepSeek MTP (depth 1): predict token t+2 from h_t and emb(t+1)."""
+    p = params["mtp"]
+    tok = batch["tokens"]
+    emb_next = embed_apply(cfg, params["embed"], tok)  # (B,T,D) of t's token
+    # position t uses emb of token t+1: shift left
+    emb_next = jnp.concatenate(
+        [emb_next[:, 1:], jnp.zeros_like(emb_next[:, :1])], axis=1)
+    hin = jnp.concatenate(
+        [norm_apply(cfg, p["norm_h"], h),
+         norm_apply(cfg, p["norm_e"], emb_next)], axis=-1)
+    h2 = hin @ p["proj"].astype(hin.dtype)
+    pos = jnp.broadcast_to(
+        jnp.arange(h2.shape[1], dtype=jnp.int32), h2.shape[:2])
+    spec = LayerSpec(mixer="attn", moe=False)
+    blk = jax.tree.map(lambda x: x[0], p["block"])
+    h2, _, _ = block_apply(cfg, ctx, spec, blk, h2, pos, "train", None, None,
+                           None)
+    h2 = norm_apply(cfg, p["final_norm"], h2)
+    # labels for t+2: shift main labels left by one more position
+    mtp_labels = jnp.concatenate(
+        [labels[:, 1:], jnp.full_like(labels[:, :1], -1)], axis=1)
+    loss, _ = lm_loss(cfg, ctx, params["embed"], h2, mtp_labels)
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, max_len: int):
+    """Shape/dtype pytree of the decode cache (for init and dry-run specs)."""
+    cross_len = cfg.encoder.seq_len if cfg.encoder is not None else 0
+    shapes = {"segs": stack_cache_shapes(cfg, batch, max_len, cross_len),
+              "len": ((), jnp.int32)}
+    if cfg.encoder is not None:
+        shapes["enc_h"] = ((batch, cfg.encoder.seq_len, cfg.d_model),
+                           jnp.dtype(cfg.compute_dtype))
+    return shapes
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.tree.map(
+        lambda sd: jnp.zeros(sd[0], sd[1]), cache_shapes(cfg, batch, max_len),
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+        and isinstance(x[0], tuple))
+
+
+def prefill(cfg: ModelConfig, ctx, params, batch, cache):
+    """Fill the cache from a full prompt; returns (last-token logits, cache)."""
+    h, _, _, new_segs, enc_h = forward(cfg, ctx, params, batch,
+                                       mode="prefill", caches=cache)
+    logits = logits_apply(cfg, ctx, params["embed"], h[:, -1:])
+    t = batch["tokens"].shape[1] + (
+        batch["patches"].shape[1] if cfg.family == "vlm" else 0)
+    new_cache = dict(cache)
+    new_cache["segs"] = new_segs
+    new_cache["len"] = jnp.int32(t)
+    if enc_h is not None:
+        new_cache["enc_h"] = enc_h
+    return logits, new_cache
+
+
+def decode_step(cfg: ModelConfig, ctx, params, cache, tokens):
+    """One decode step.  tokens (B, 1) i32.  Returns (logits, cache)."""
+    batch = {"tokens": tokens}
+    if cfg.family == "vlm":
+        batch = {"tokens": tokens,
+                 "patches": jnp.zeros((tokens.shape[0], 0, cfg.d_model),
+                                      jnp.dtype(cfg.compute_dtype))}
+    h, _, _, new_segs, _ = forward(cfg, ctx, params, batch, mode="decode",
+                                   caches=cache)
+    logits = logits_apply(cfg, ctx, params["embed"], h)
+    new_cache = dict(cache)
+    new_cache["segs"] = new_segs
+    new_cache["len"] = cache["len"] + 1
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# analytic parameter count (6ND roofline term)
+# ---------------------------------------------------------------------------
+
+
+def count_params(cfg: ModelConfig) -> int:
+    d = cfg.d_model
+    norm_p = 2 * d if cfg.norm == "layernorm" else d
+
+    def attn_params():
+        if cfg.attention == "mla":
+            m = cfg.mla
+            dn, dr, dv = (m.qk_nope_head_dim, m.qk_rope_head_dim,
+                          m.v_head_dim)
+            t = d * m.q_lora_rank + m.q_lora_rank
+            t += m.q_lora_rank * cfg.num_heads * (dn + dr)
+            t += d * (m.kv_lora_rank + dr) + m.kv_lora_rank
+            t += m.kv_lora_rank * cfg.num_heads * (dn + dv)
+            t += cfg.num_heads * dv * d
+            return t
+        hd = cfg.head_dim_
+        t = d * hd * (cfg.num_heads + 2 * cfg.num_kv_heads)
+        t += cfg.num_heads * hd * d
+        if cfg.qkv_bias:
+            t += hd * (cfg.num_heads + 2 * cfg.num_kv_heads)
+        return t
+
+    def mlp_params():
+        n_mats = 3 if cfg.mlp_gated else 2
+        return n_mats * d * cfg.d_ff
+
+    total = cfg.vocab_size * d
+    if not cfg.tie_embeddings:
+        total += cfg.vocab_size * d
+    for spec in cfg.layer_specs():
+        total += norm_p  # norm1
+        if spec.mixer == "attn":
+            total += attn_params()
+            if cfg.encoder is not None:  # decoder cross-attention
+                total += norm_p + attn_params()
+        elif spec.mixer == "mamba":
+            from .mamba import mamba_dims
+            d_in, n, dt_rank = mamba_dims(cfg)
+            total += d * 2 * d_in + cfg.mamba.d_conv * d_in + d_in
+            total += d_in * (dt_rank + 2 * n) + dt_rank * d_in + d_in
+            total += d_in * n + d_in + d_in * d
+            total += dt_rank + 2 * n  # dt/b/c inner rmsnorms
+        elif spec.mixer == "rwkv":
+            total += 5 * d + 5 * d * d + 2 * d * cfg.rwkv.decay_lora
+            total += 4 * d  # w_base, u, gn scale/bias
+        total += norm_p  # norm2
+        if spec.mixer == "rwkv":
+            total += 2 * d + 2 * d * cfg.d_ff + d * d
+        elif spec.moe:
+            tot, _ = count_moe_params(cfg)
+            total += tot
+        else:
+            total += mlp_params()
+    total += norm_p  # final norm
+    if cfg.encoder is not None:
+        e = cfg.encoder
+        per = attn_params() + mlp_params() + 2 * norm_p
+        total += e.num_layers * per + norm_p
+    if cfg.mtp_depth > 0:
+        total += 2 * d * d + 2 * norm_p  # proj + norms
+        total += attn_params() + mlp_params() + 2 * norm_p  # mtp block
+        total += norm_p
+    return int(total)
+
+
+def count_active_params(cfg: ModelConfig) -> int:
+    """Active (per-token) params — the N in 6ND for MoE models."""
+    if cfg.moe is None:
+        return count_params(cfg)
+    total = count_params(cfg)
+    tot_moe, active_moe = count_moe_params(cfg)
+    n_moe = sum(1 for s in cfg.layer_specs() if s.moe)
+    return int(total - n_moe * (tot_moe - active_moe))

@@ -1,0 +1,192 @@
+"""RWKV6 "Finch" mixer: linear attention with data-dependent decay.
+
+The per-head recurrence (head size K = V = 64)
+
+    y_t = r_t · (S_{t-1} + (u ⊙ k_t) ⊗ v_t)
+    S_t = diag(w_t) S_{t-1} + k_t ⊗ v_t        w_t = exp(-exp(lora_w(x_t)))
+
+is linear in S, so within a time-chunk it is an associative scan over
+(decay, outer-product) pairs; the (B, H, K, V) state is the only carry
+across chunks — O(1) in sequence length, which is what makes the
+``long_500k`` cell runnable for this arch.  The data-dependent decay (the
+Finch contribution vs RWKV5) is the low-rank ``w_lora`` path.
+
+Simplification vs the reference implementation (recorded in DESIGN.md):
+static per-channel token-shift mixing coefficients (RWKV5-style) instead of
+the rank-32 data-dependent ddlerp on all five branches; the decay itself
+*is* data-dependent as in Finch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, RWKVConfig
+from .layers import dense_init, split
+
+
+def rwkv_heads(cfg: ModelConfig):
+    r: RWKVConfig = cfg.rwkv
+    assert cfg.d_model % r.head_size == 0
+    return cfg.d_model // r.head_size, r.head_size
+
+
+def rwkv_time_init(rng, cfg: ModelConfig):
+    r: RWKVConfig = cfg.rwkv
+    d = cfg.d_model
+    ks = split(rng, 8)
+    ramp = jnp.arange(d, dtype=jnp.float32) / d
+    return {
+        "mu_r": 0.5 * (1 + ramp), "mu_k": 0.5 * (1 + ramp),
+        "mu_v": 0.5 * (1 + ramp), "mu_w": 0.5 * (1 + ramp),
+        "mu_g": 0.5 * (1 + ramp),
+        "wr": dense_init(ks[0], (d, d)),
+        "wk": dense_init(ks[1], (d, d)),
+        "wv": dense_init(ks[2], (d, d)),
+        "wg": dense_init(ks[3], (d, d)),
+        "wo": dense_init(ks[4], (d, d)),
+        # data-dependent decay lora (Finch): w = exp(-exp(base + lora(x)))
+        "w_base": jnp.zeros((d,), jnp.float32) - 6.0 + 5.0 * ramp,
+        "w_lora_a": dense_init(ks[5], (d, r.decay_lora)),
+        "w_lora_b": dense_init(ks[6], (r.decay_lora, d), scale=0.1),
+        "u": jnp.zeros((d,), jnp.float32) + 0.5 * ramp,
+        # per-head group-norm after wkv
+        "gn_scale": jnp.ones((d,), jnp.float32),
+        "gn_bias": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def rwkv_channel_init(rng, cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = split(rng, 3)
+    ramp = jnp.arange(d, dtype=jnp.float32) / d
+    return {
+        "mu_k": 0.5 * (1 + ramp), "mu_r": 0.5 * (1 + ramp),
+        "wk": dense_init(ks[0], (d, f)),
+        "wv": dense_init(ks[1], (f, d)),
+        "wr": dense_init(ks[2], (d, d)),
+    }
+
+
+def _shift(x, x_prev=None):
+    """Token shift: value of the previous position (0 / carried state)."""
+    if x_prev is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * mu.astype(x.dtype)
+
+
+def _group_norm(p, x, heads, eps=1e-5):
+    """Per-head layer norm over the head channel (RWKV's GroupNorm(H))."""
+    b, t, d = x.shape
+    xh = x.reshape(b, t, heads, d // heads).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = ((xh - mu) ** 2).mean(-1, keepdims=True)
+    y = ((xh - mu) * jax.lax.rsqrt(var + eps)).reshape(b, t, d)
+    return (y * p["gn_scale"] + p["gn_bias"]).astype(x.dtype)
+
+
+def _wkv_chunk(r_c, k_c, v_c, w_c, u, s0):
+    """One chunk of the wkv recurrence via associative scan.
+
+    r/k/v (B,c,H,K), w (B,c,H,K) in (0,1); s0 (B,H,K,V) f32.
+    Returns (y (B,c,H,V), s_end).
+    """
+    kv = k_c[..., :, None] * v_c[..., None, :]  # (B,c,H,K,V)
+
+    def combine(l, rgt):
+        (a1, m1), (a2, m2) = l, rgt
+        return a1 * a2, a2 * m1 + m2
+
+    w_b = w_c[..., :, None]  # (B,c,H,K,1) broadcasting over V
+    a_cum, m_cum = jax.lax.associative_scan(
+        combine, (jnp.broadcast_to(w_b, kv.shape), kv), axis=1)
+    s_all = a_cum * s0[:, None] + m_cum  # S_t (inclusive of step t)
+    s_end = s_all[:, -1]
+    # S_{t-1}: shift right, S_{-1} = s0
+    s_prev = jnp.concatenate([s0[:, None], s_all[:, :-1]], axis=1)
+    y = jnp.einsum("bchk,bchkv->bchv", r_c, s_prev)
+    bonus = jnp.einsum("bchk,bchk->bch", r_c, u * k_c)[..., None] * v_c
+    return y + bonus, s_end
+
+
+def rwkv_time_apply(cfg: ModelConfig, ctx, p, x, state=None, x_prev=None):
+    """RWKV6 time-mix.  x (B,T,D) -> (y, (x_last, S_end))."""
+    r_cfg: RWKVConfig = cfg.rwkv
+    h, hs = rwkv_heads(cfg)
+    b, t, d = x.shape
+    dt_ = x.dtype
+    xs = _shift(x, x_prev)
+    r = _mix(x, xs, p["mu_r"]) @ p["wr"].astype(dt_)
+    k = _mix(x, xs, p["mu_k"]) @ p["wk"].astype(dt_)
+    v = _mix(x, xs, p["mu_v"]) @ p["wv"].astype(dt_)
+    g = _mix(x, xs, p["mu_g"]) @ p["wg"].astype(dt_)
+    xw = _mix(x, xs, p["mu_w"])
+    w_log = (p["w_base"].astype(jnp.float32)
+             + (xw @ p["w_lora_a"].astype(dt_)).astype(jnp.float32)
+             @ p["w_lora_b"])  # (B,T,D) data-dependent decay (Finch)
+    w = jnp.exp(-jnp.exp(w_log))  # in (0,1)
+
+    def to_heads(z):
+        return z.reshape(b, t, h, hs)
+
+    r_h = ctx.shard(to_heads(r).astype(jnp.float32), ctx.batch_axes, None,
+                    ctx.model_axis, None)
+    k_h = ctx.shard(to_heads(k).astype(jnp.float32), ctx.batch_axes, None,
+                    ctx.model_axis, None)
+    v_h = ctx.shard(to_heads(v).astype(jnp.float32), ctx.batch_axes, None,
+                    ctx.model_axis, None)
+    w_h = to_heads(w)
+    u_h = p["u"].reshape(h, hs)
+
+    s0 = (jnp.zeros((b, h, hs, hs), jnp.float32) if state is None else state)
+    chunk = min(r_cfg.chunk or t, t)
+    pad = -(-t // chunk) * chunk - t
+    if pad:
+        r_h, k_h, v_h, w_h = (jnp.pad(z, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                              for z in (r_h, k_h, v_h, w_h))
+        w_h = w_h + (jnp.arange(t + pad) >= t).astype(w_h.dtype)[None, :, None, None]
+    nt = (t + pad) // chunk
+
+    @jax.checkpoint  # recompute the (B,c,H,K,V) chunk tensors in backward
+    def chunk_step(s, idx):
+        sl = lambda z: jax.lax.dynamic_slice_in_dim(z, idx * chunk, chunk, 1)
+        y_c, s_end = _wkv_chunk(sl(r_h), sl(k_h), sl(v_h), sl(w_h), u_h, s)
+        return s_end, y_c
+
+    if cfg.scan_seq:
+        s_end, ys = jax.lax.scan(chunk_step, s0, jnp.arange(nt))
+        y = jnp.moveaxis(ys, 0, 1).reshape(b, nt * chunk, h, hs)
+    else:  # exact-HLO costing path
+        s, parts = s0, []
+        for i in range(nt):
+            s, y_c = chunk_step(s, i)
+            parts.append(y_c)
+        s_end = s
+        y = jnp.concatenate(parts, axis=1)
+    y = y[:, :t].reshape(b, t, d).astype(dt_)
+    y = _group_norm(p, y, h)
+    y = y * jax.nn.silu(g)
+    return y @ p["wo"].astype(dt_), (x[:, -1], s_end)
+
+
+def rwkv_channel_apply(cfg: ModelConfig, ctx, p, x, x_prev=None):
+    """RWKV channel-mix (the arch's FFN).  Returns (y, x_last)."""
+    dt_ = x.dtype
+    xs = _shift(x, x_prev)
+    k = _mix(x, xs, p["mu_k"]) @ p["wk"].astype(dt_)
+    k = ctx.act_btf(k)
+    k = jnp.square(jax.nn.relu(k))
+    kv = k @ p["wv"].astype(dt_)
+    rgate = jax.nn.sigmoid(_mix(x, xs, p["mu_r"]) @ p["wr"].astype(dt_))
+    return rgate * kv, x[:, -1]
+
+
+def rwkv_state_shapes(cfg: ModelConfig, batch: int):
+    h, hs = rwkv_heads(cfg)
+    return ((batch, cfg.d_model),  # time-mix shift state
+            (batch, h, hs, hs),  # wkv state
+            (batch, cfg.d_model))  # channel-mix shift state

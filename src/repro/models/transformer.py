@@ -1,0 +1,319 @@
+"""Block assembly and the segment-scanned layer stack.
+
+A *block* is one layer: pre-norm mixer (attn / mla / mamba / rwkv) plus
+pre-norm FFN (mlp / moe / rwkv channel-mix).  Layers are grouped into
+homogeneous *segments* (``config.derive_segments``) whose params are stacked
+on a leading axis and traversed with ``lax.scan`` + optional per-block
+remat — an 88-layer model lowers to a few hundred HLO ops.  Setting
+``cfg.scan_layers=False`` python-unrolls the stack (exact-HLO costing).
+
+Three modes share the block code:
+  'train'   — full sequence, no cache, returns MoE aux losses.
+  'prefill' — full sequence, fills the per-layer cache at position 0.
+  'decode'  — one token against the cache at position ``length``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import mamba as mam
+from . import moe as moe_mod
+from . import rwkv as rk
+from .config import LayerSpec, ModelConfig, derive_segments
+from .layers import dense_init, mlp_init, mlp_apply, norm_apply, norm_init, split
+
+
+# ---------------------------------------------------------------------------
+# per-block init
+# ---------------------------------------------------------------------------
+
+
+def block_init(rng, cfg: ModelConfig, spec: LayerSpec, cross: bool = False):
+    ks = split(rng, 6)
+    p: dict[str, Any] = {"norm1": norm_init(cfg)}
+    if spec.mixer == "attn":
+        p["mixer"] = (attn.mla_init(ks[0], cfg) if cfg.attention == "mla"
+                      else attn.gqa_init(ks[0], cfg))
+    elif spec.mixer == "mamba":
+        p["mixer"] = mam.mamba_init(ks[0], cfg)
+    elif spec.mixer == "rwkv":
+        p["mixer"] = rk.rwkv_time_init(ks[0], cfg)
+    else:
+        raise ValueError(spec.mixer)
+    if cross:
+        p["norm_x"] = norm_init(cfg)
+        p["xattn"] = attn.gqa_init(ks[1], cfg)
+    p["norm2"] = norm_init(cfg)
+    if spec.mixer == "rwkv":
+        p["ffn"] = rk.rwkv_channel_init(ks[2], cfg)
+    elif spec.moe:
+        p["ffn"] = moe_mod.moe_init(ks[2], cfg)
+    else:
+        p["ffn"] = mlp_init(ks[2], cfg)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# per-block cache
+# ---------------------------------------------------------------------------
+
+
+def block_cache_shapes(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                       max_len: int, cross_len: int = 0):
+    """Dict of (shape, dtype) for this block's decode cache."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    out: dict[str, tuple] = {}
+    if spec.mixer == "attn":
+        if cfg.attention == "mla":
+            m = cfg.mla
+            out["ckv"] = ((batch, max_len, m.kv_lora_rank), cd)
+            out["krope"] = ((batch, max_len, m.qk_rope_head_dim), cd)
+        else:
+            hkv, hd = cfg.num_kv_heads, cfg.head_dim_
+            out["k"] = ((batch, max_len, hkv, hd), cd)
+            out["v"] = ((batch, max_len, hkv, hd), cd)
+        if cross_len:
+            hkv, hd = cfg.num_kv_heads, cfg.head_dim_
+            out["ck"] = ((batch, cross_len, hkv, hd), cd)
+            out["cv"] = ((batch, cross_len, hkv, hd), cd)
+    elif spec.mixer == "mamba":
+        conv_s, ssm_s = mam.mamba_state_shapes(cfg, batch)
+        out["conv"] = (conv_s, cd)
+        out["ssm"] = (ssm_s, jnp.float32)
+    elif spec.mixer == "rwkv":
+        xt, s, xc = rk.rwkv_state_shapes(cfg, batch)
+        out["xt"] = (xt, cd)
+        out["s"] = (s, jnp.float32)
+        out["xc"] = (xc, cd)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# per-block apply (train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def block_apply(cfg: ModelConfig, ctx, spec: LayerSpec, p, h, positions,
+                mode: str, cache, length, enc_h):
+    """Returns (h, new_cache, aux)."""
+    new_cache = dict(cache) if cache is not None else None
+    aux = jnp.float32(0)
+    x = norm_apply(cfg, p["norm1"], h)
+
+    if spec.mixer == "attn":
+        if mode == "decode":
+            if cfg.attention == "mla":
+                y, ckv, krope = attn.mla_decode(
+                    cfg, ctx, p["mixer"], x, cache["ckv"], cache["krope"], length)
+                new_cache.update(ckv=ckv, krope=krope)
+            else:
+                y, ck, cv = attn.gqa_decode(
+                    cfg, ctx, p["mixer"], x, cache["k"], cache["v"], length)
+                new_cache.update(k=ck, v=cv)
+        else:
+            if cfg.attention == "mla":
+                y, (c_kv, k_rope) = attn.mla_apply(cfg, ctx, p["mixer"], x,
+                                                   positions,
+                                                   causal=cfg.causal)
+                if mode == "prefill":
+                    new_cache["ckv"] = _fill(cache["ckv"], c_kv)
+                    new_cache["krope"] = _fill(cache["krope"], k_rope)
+            else:
+                y, (k, v) = attn.gqa_apply(cfg, ctx, p["mixer"], x, positions,
+                                           causal=cfg.causal)
+                if mode == "prefill":
+                    new_cache["k"] = ctx.kv_cache(_fill(cache["k"], k))
+                    new_cache["v"] = ctx.kv_cache(_fill(cache["v"], v))
+    elif spec.mixer == "mamba":
+        if mode == "decode":
+            y, conv_s, ssm_s = mam.mamba_decode(
+                cfg, ctx, p["mixer"], x, cache["conv"], cache["ssm"])
+            new_cache.update(conv=conv_s.astype(cache["conv"].dtype), ssm=ssm_s)
+        else:
+            y, (conv_s, ssm_s) = mam.mamba_apply(cfg, ctx, p["mixer"], x)
+            if mode == "prefill":
+                new_cache.update(conv=conv_s.astype(cache["conv"].dtype),
+                                 ssm=ssm_s)
+    elif spec.mixer == "rwkv":
+        if mode == "decode":
+            y, (xt, s) = rk.rwkv_time_apply(cfg, ctx, p["mixer"], x,
+                                            state=cache["s"],
+                                            x_prev=cache["xt"].astype(x.dtype))
+            new_cache.update(xt=xt.astype(cache["xt"].dtype), s=s)
+        else:
+            y, (xt, s) = rk.rwkv_time_apply(cfg, ctx, p["mixer"], x)
+            if mode == "prefill":
+                new_cache.update(xt=xt.astype(cache["xt"].dtype), s=s)
+    h = h + y
+
+    # cross-attention (enc-dec decoder blocks)
+    if "xattn" in p:
+        xq = norm_apply(cfg, p["norm_x"], h)
+        if mode == "decode":
+            kv = (cache["ck"], cache["cv"])
+        else:
+            kv = attn.cross_attn_kv(cfg, p["xattn"], enc_h)
+            if mode == "prefill":
+                new_cache["ck"] = kv[0].astype(cache["ck"].dtype)
+                new_cache["cv"] = kv[1].astype(cache["cv"].dtype)
+        h = h + attn.cross_attn_apply(cfg, ctx, p["xattn"], xq, kv)
+
+    # FFN
+    x2 = norm_apply(cfg, p["norm2"], h)
+    if spec.mixer == "rwkv":
+        if mode == "decode":
+            y2, xc = rk.rwkv_channel_apply(cfg, ctx, p["ffn"], x2,
+                                           x_prev=cache["xc"].astype(x2.dtype))
+            new_cache["xc"] = xc.astype(cache["xc"].dtype)
+        else:
+            y2, xc = rk.rwkv_channel_apply(cfg, ctx, p["ffn"], x2)
+            if mode == "prefill":
+                new_cache["xc"] = xc.astype(cache["xc"].dtype)
+    elif spec.moe:
+        y2, aux = moe_mod.moe_apply(cfg, ctx, p["ffn"], x2)
+    else:
+        y2 = mlp_apply(cfg, ctx, p["ffn"], x2)
+    h = ctx.act_btd(h + y2)
+    return h, new_cache, aux
+
+
+def _fill(cache_arr, new_vals):
+    """Write full-sequence values at position 0 of the cache."""
+    t = new_vals.shape[1]
+    s = cache_arr.shape[1]
+    vals = new_vals.astype(cache_arr.dtype)
+    if t == s:
+        return vals
+    pad = [(0, 0), (0, s - t)] + [(0, 0)] * (vals.ndim - 2)
+    return jnp.pad(vals, pad)
+
+
+# ---------------------------------------------------------------------------
+# segment traversal (scan over stacked layers)
+# ---------------------------------------------------------------------------
+
+
+def segment_init(rng, cfg: ModelConfig, pattern, repeats, cross=False):
+    """Stacked params: each leaf gets a leading ``repeats`` axis."""
+    def one(r):
+        ks = split(r, len(pattern))
+        return [block_init(k, cfg, spec, cross=cross)
+                for k, spec in zip(ks, pattern)]
+
+    return jax.vmap(one)(jnp.stack(split(rng, repeats)))
+
+
+def run_segment(cfg: ModelConfig, ctx, pattern, repeats, seg_params, h,
+                positions, mode, seg_cache, length, enc_h):
+    """Apply ``pattern`` x ``repeats`` layers.  seg_cache leaves are stacked
+    (repeats, ...).  Returns (h, new_seg_cache, aux_sum)."""
+
+    def body(carry, xs):
+        h = carry
+        p_list, c_list = xs
+        aux = jnp.float32(0)
+        new_c = []
+        for spec, p_blk, c_blk in zip(pattern, p_list, c_list):
+            h, c_new, a = block_apply(cfg, ctx, spec, p_blk, h, positions,
+                                      mode, c_blk, length, enc_h)
+            aux = aux + a
+            new_c.append(c_new if c_new is not None else {})
+        return h, (new_c, aux)
+
+    none_cache = seg_cache is None
+
+    if cfg.scan_layers and repeats > 1:
+        fn = body
+        if mode == "train" and cfg.remat == "block":
+            fn = jax.checkpoint(body)
+        if none_cache:
+            def fn2(carry, p_list):
+                return fn(carry, (p_list, [None] * len(pattern)))
+            h, (_, auxs) = jax.lax.scan(fn2, h, seg_params)
+            return h, None, auxs.sum()
+
+        # The cache rides in the scan CARRY (not xs/ys): while-loop carry
+        # buffers alias across iterations and with the donated input, so the
+        # multi-GB KV cache stays a single in-place buffer.  xs/ys would
+        # double-buffer it (input stack + output stack).
+        def fn_carry(carry, xs):
+            h, cache_full = carry
+            p_list, idx = xs
+            c_list = jax.tree.map(
+                lambda x: jax.lax.dynamic_index_in_dim(x, idx, 0,
+                                                       keepdims=False),
+                cache_full)
+            h, (new_c, aux) = fn(h, (p_list, c_list))
+            cache_full = jax.tree.map(
+                lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                    full, new.astype(full.dtype), idx, 0),
+                cache_full, new_c)
+            return (h, cache_full), aux
+
+        (h, new_cache), auxs = jax.lax.scan(
+            fn_carry, (h, seg_cache),
+            (seg_params, jnp.arange(repeats, dtype=jnp.int32)))
+        return h, new_cache, auxs.sum()
+
+    # unrolled path (also used when repeats == 1)
+    fn = body
+    if mode == "train" and cfg.remat == "block" and cfg.scan_layers:
+        fn = jax.checkpoint(body)
+    aux_tot = jnp.float32(0)
+    per_layer = []
+    for r in range(repeats):
+        p_list = jax.tree.map(lambda x: x[r], seg_params)
+        c_list = (None if none_cache
+                  else jax.tree.map(lambda x: x[r], seg_cache))
+        h, (new_c, aux) = fn(h, (p_list,
+                                 c_list if c_list is not None
+                                 else [None] * len(pattern)))
+        aux_tot = aux_tot + aux
+        if not none_cache:
+            per_layer.append(new_c)
+    new_stacked = None
+    if not none_cache:  # single stack at the end (one copy, not O(R^2))
+        new_stacked = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *per_layer)
+    return h, new_stacked, aux_tot
+
+
+def stack_init(rng, cfg: ModelConfig, cross=False):
+    """Init all segments.  Returns list of stacked segment params."""
+    segs = derive_segments(cfg)
+    ks = split(rng, len(segs))
+    return [segment_init(k, cfg, pattern, repeats, cross=cross)
+            for k, (pattern, repeats) in zip(ks, segs)]
+
+
+def stack_apply(cfg: ModelConfig, ctx, segments_params, h, positions, mode,
+                caches=None, length=None, enc_h=None):
+    """Run the whole layer stack.  Returns (h, new_caches, aux_sum)."""
+    segs = derive_segments(cfg)
+    aux_tot = jnp.float32(0)
+    new_caches = []
+    for si, (pattern, repeats) in enumerate(segs):
+        seg_cache = caches[si] if caches is not None else None
+        h, new_c, aux = run_segment(
+            cfg, ctx, pattern, repeats, segments_params[si], h, positions,
+            mode, seg_cache, length, enc_h)
+        aux_tot = aux_tot + aux
+        new_caches.append(new_c)
+    return h, (new_caches if caches is not None else None), aux_tot
+
+
+def stack_cache_shapes(cfg: ModelConfig, batch: int, max_len: int,
+                       cross_len: int = 0):
+    """Stacked cache shape/dtype pytree matching stack_apply's traversal."""
+    out = []
+    for pattern, repeats in derive_segments(cfg):
+        seg = []
+        for spec in pattern:
+            shapes = block_cache_shapes(cfg, spec, batch, max_len, cross_len)
+            seg.append({k: ((repeats,) + s, d) for k, (s, d) in shapes.items()})
+        out.append(seg)
+    return out

@@ -1,0 +1,2 @@
+from .ctx import NO_PARALLEL, ParallelCtx  # noqa: F401
+from .sharding import ParallelPlan, Rules, make_rules  # noqa: F401

@@ -1,0 +1,106 @@
+"""Parallelism context: logical-axis sharding threaded through the models.
+
+One small immutable object carries everything the model stack needs to know
+about the mesh.  ``ctx.shard(x, *axes)`` places a ``with_sharding_constraint``
+using *logical* axis names resolved against the mesh; with no mesh (unit
+tests, single-CPU smoke) every call is an identity, so model code is written
+once and runs anywhere.
+
+Logical activation axes used by the model stack:
+
+  batch   -> ctx.batch_axes      (('pod','data') on the multi-pod mesh)
+  seq     -> ctx.seq_axis        (None normally; 'data' for batch=1
+                                  long-context decode, sharding the KV cache
+                                  and attention across the pod)
+  heads / d_ff / experts / vocab -> ctx.model_axis  (tensor parallel)
+  d_model -> replicated
+
+Weight sharding is decided by rules in ``parallel.sharding`` (not here) so
+the dry-run can build param shardings without instantiating the model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelCtx:
+    mesh: Optional[Mesh] = None
+    batch_axes: Tuple[str, ...] = ("data",)
+    model_axis: Optional[str] = "model"
+    seq_axis: Optional[str] = None  # shard sequence/KV (long-context decode)
+    fsdp_axes: Tuple[str, ...] = ()  # extra axes sharding big weight matrices
+
+    # ---- helpers ---------------------------------------------------------
+
+    @property
+    def model_size(self) -> int:
+        if self.mesh is None or self.model_axis is None:
+            return 1
+        return self.mesh.shape[self.model_axis]
+
+    def axis_ok(self, axis, size: int) -> bool:
+        """Can dimension of ``size`` be sharded over ``axis``?"""
+        if self.mesh is None or axis is None:
+            return False
+        if isinstance(axis, str):
+            n = self.mesh.shape[axis]
+        else:
+            n = 1
+            for a in axis:
+                n *= self.mesh.shape[a]
+        return size % n == 0
+
+    def spec(self, *axes) -> P:
+        return P(*axes)
+
+    def shard(self, x, *axes):
+        """Constrain ``x`` to PartitionSpec(*axes); identity without a mesh.
+
+        ``axes`` entries are mesh axis names / tuples / None, one per dim.
+        Dims whose size does not divide the axis fall back to replicated.
+        """
+        if self.mesh is None:
+            return x
+        fixed = []
+        for d, a in enumerate(axes):
+            if a is None:
+                fixed.append(None)
+            elif self.axis_ok(a, x.shape[d]):
+                fixed.append(a)
+            else:
+                fixed.append(None)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*fixed)))
+
+    # Activation conventions -------------------------------------------------
+
+    def act_btd(self, x):
+        """(batch, seq, d_model): batch over data axes, d_model replicated."""
+        return self.shard(x, self.batch_axes, self.seq_axis, None)
+
+    def act_bthd(self, x):
+        """(batch, seq, heads, head_dim): heads tensor-parallel."""
+        return self.shard(x, self.batch_axes, None, self.model_axis, None)
+
+    def act_btf(self, x):
+        """(batch, seq, d_ff): feed-forward hidden tensor-parallel."""
+        return self.shard(x, self.batch_axes, self.seq_axis, self.model_axis)
+
+    def act_btv(self, x):
+        """(batch, seq, vocab): vocab (logit) tensor-parallel."""
+        return self.shard(x, self.batch_axes, None, self.model_axis)
+
+    def kv_cache(self, x):
+        """(batch, s_max, kv_heads, head_dim) KV cache; seq sharded when
+        ``seq_axis`` is set (long-context decode), else heads TP."""
+        if self.seq_axis is not None:
+            return self.shard(x, self.batch_axes, self.seq_axis, None, None)
+        return self.shard(x, self.batch_axes, None, self.model_axis, None)
+
+
+NO_PARALLEL = ParallelCtx()

@@ -1,0 +1,243 @@
+"""Weight / optimizer / batch / cache sharding rules (GSPMD PartitionSpecs).
+
+Rules are *name-and-shape* driven over the params pytree, with divisibility
+fallbacks (a head count that does not divide the TP axis degrades that
+matrix to replicated — e.g. smollm's 15 heads, MQA's single KV head — and
+the rule engine records what fell back, so EXPERIMENTS.md can report it).
+
+Layout recap (leading ``R`` = stacked scan axis, never sharded):
+  attention   wq (R,D,H,hd): heads->model     wo (R,H,hd,D): heads->model
+              wk/wv (R,D,Hkv,hd): kv->model when divisible else replicated
+  MLA         wuq/wuk/wuv: heads->model; latent projections replicated
+  MLP         wi/wg (R,D,F): F->model         wo (R,F,D): F->model
+  MoE         wi/wg/wo (R,E,D,F): E->model (expert parallelism)
+  mamba       d_inner->model everywhere it appears
+  rwkv        square mixers: col-parallel in, row-parallel out
+  embed       (V,D): V->model                 unembed (D,V): V->model
+  FSDP        optionally shard D (or the largest free axis) over data axes
+  ZeRO-1      optimizer moments additionally sharded over data axes
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .ctx import ParallelCtx
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelPlan:
+    """Everything the launcher decides about distribution for one cell."""
+
+    batch_axes: Tuple[str, ...] = ("data",)
+    model_axis: Optional[str] = "model"
+    seq_axis: Optional[str] = None  # long-context decode: shard KV sequence
+    fsdp_axes: Tuple[str, ...] = ()  # shard params over data axes too
+    zero1: bool = True  # shard optimizer moments over data axes
+    remat: str = "block"
+    accum_steps: int = 1  # gradient-accumulation microbatches
+    moments_dtype: str = "float32"  # optimizer moments precision
+
+    def ctx(self, mesh: Mesh) -> ParallelCtx:
+        return ParallelCtx(mesh=mesh, batch_axes=self.batch_axes,
+                           model_axis=self.model_axis, seq_axis=self.seq_axis,
+                           fsdp_axes=self.fsdp_axes)
+
+
+def _axsize(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+def _leaf_name(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+    return "/".join(parts)
+
+
+class Rules:
+    """Param PartitionSpec assignment with divisibility fallbacks."""
+
+    def __init__(self, mesh: Mesh, plan: ParallelPlan):
+        self.mesh = mesh
+        self.plan = plan
+        self.tp = _axsize(mesh, plan.model_axis)
+        self.fsdp = _axsize(mesh, plan.fsdp_axes) if plan.fsdp_axes else 1
+        self.fallbacks: list[str] = []
+
+    def _tp(self, size: int, name: str):
+        if self.plan.model_axis and size % self.tp == 0 and self.tp > 1:
+            return self.plan.model_axis
+        if self.tp > 1:
+            self.fallbacks.append(f"{name}: dim {size} !% tp {self.tp}")
+        return None
+
+    def _fsdp(self, size: int):
+        if self.plan.fsdp_axes and size % self.fsdp == 0 and self.fsdp > 1:
+            return self.plan.fsdp_axes
+        return None
+
+    def param_spec(self, path, leaf) -> P:
+        name = _leaf_name(path)
+        base = name.rsplit("/", 1)[-1]
+        shape = leaf.shape
+        nd = len(shape)
+        in_segment = "segments" in name or "block" in name
+        off = 1 if in_segment else 0  # leading stacked-repeat axis
+
+        def pad(spec_tail):
+            return P(*([None] * off + spec_tail + [None] * (nd - off - len(spec_tail))))
+
+        d = shape[off] if nd > off else 0
+        if base == "wq" and nd - off == 3:  # (D, H, hd)
+            return pad([self._fsdp(d), self._tp(shape[off + 1], name), None])
+        if base in ("wk", "wv") and nd - off == 3:  # (D, Hkv, hd)
+            return pad([self._fsdp(d), self._tp(shape[off + 1], name), None])
+        if base == "wo" and nd - off == 3:  # (H, hd, D) attention out
+            return pad([self._tp(shape[off], name), None, self._fsdp(shape[off + 2])])
+        if base in ("wuq", "wuk", "wuv"):  # MLA up: (rank, H, hd)
+            return pad([None, self._tp(shape[off + 1], name), None])
+        if base in ("wdq", "wdkv"):  # MLA down: (D, rank)
+            return pad([self._fsdp(d), None])
+        if base in ("wi", "wg") and nd - off == 3:  # MoE experts (E, D, F)
+            return pad([self._tp(shape[off], name), self._fsdp(shape[off + 1]), None])
+        if base == "wo" and nd - off == 3 and "ffn" in name:  # handled above
+            return pad([self._tp(shape[off], name), None, None])
+        if base in ("wi", "wg"):  # MLP (D, F)
+            return pad([self._fsdp(d), self._tp(shape[off + 1], name)])
+        if base == "wo" and nd - off == 2:  # MLP out (F, D)
+            return pad([self._tp(d, name), self._fsdp(shape[off + 1])])
+        if base == "router":  # (E, D) expert embeddings: small, replicate
+            return pad([None, None])
+        if base in ("shared_wi", "shared_wg"):
+            return pad([self._fsdp(d), self._tp(shape[off + 1], name)])
+        if base == "shared_wo":
+            return pad([self._tp(d, name), self._fsdp(shape[off + 1])])
+        # mamba
+        if base == "in_proj":
+            return pad([self._fsdp(d), self._tp(shape[off + 1], name)])
+        if base == "conv_w":
+            return pad([None, self._tp(shape[off + 1], name)])
+        if base in ("conv_b", "dt_bias", "d_skip"):
+            return pad([self._tp(d, name)])
+        if base == "x_proj":
+            return pad([self._tp(d, name), None])
+        if base == "dt_proj":
+            return pad([None, self._tp(shape[off + 1], name)])
+        if base == "a_log":
+            return pad([self._tp(d, name), None])
+        if base == "out_proj":
+            return pad([self._tp(d, name), self._fsdp(shape[off + 1])])
+        # rwkv square mixers: col-parallel r/k/v/g, row-parallel o
+        if base in ("wr", "wk", "wv", "wg") and nd - off == 2 and "ffn" not in name:
+            return pad([self._fsdp(d), self._tp(shape[off + 1], name)])
+        if base == "wo" and nd - off == 2:
+            return pad([self._tp(d, name), self._fsdp(shape[off + 1])])
+        if base in ("wk",) and "ffn" in name:  # rwkv channel-mix (D, F)
+            return pad([self._fsdp(d), self._tp(shape[off + 1], name)])
+        if base in ("wv",) and "ffn" in name:  # (F, D)
+            return pad([self._tp(d, name), self._fsdp(shape[off + 1])])
+        # embeddings
+        if base == "tok":
+            return P(self._tp(shape[0], name), None)
+        if base == "unembed":
+            return P(self._fsdp(shape[0]), self._tp(shape[1], name))
+        if base == "proj" and "mtp" in name:
+            return P(self._fsdp(shape[0]), None)
+        # norms, biases, vectors: replicated
+        return P(*([None] * nd))
+
+    # ---- public builders ---------------------------------------------------
+
+    def params(self, params_tree) -> Any:
+        return jax.tree_util.tree_map_with_path(
+            lambda p, x: NamedSharding(self.mesh, self.param_spec(p, x)),
+            params_tree)
+
+    def opt_state(self, params_tree) -> Any:
+        """ZeRO-1: moments get the param spec plus 'data' on the first free,
+        divisible axis."""
+        def spec(path, leaf):
+            ps = self.param_spec(path, leaf)
+            if not self.plan.zero1:
+                return NamedSharding(self.mesh, ps)
+            parts = list(ps) + [None] * (len(leaf.shape) - len(ps))
+            # axes already consumed by the param spec (TP and/or FSDP) can't
+            # be reused on another dim of the same tensor
+            used = set()
+            for p_ in parts:
+                if p_ is None:
+                    continue
+                used.update(p_ if isinstance(p_, tuple) else (p_,))
+            dp = tuple(a for a in self.plan.batch_axes if a not in used)
+            dp_size = _axsize(self.mesh, dp) if dp else 1
+            for i, (cur, dim) in enumerate(zip(parts, leaf.shape)):
+                if cur is None and dp_size > 1 and dim % dp_size == 0:
+                    parts[i] = dp if len(dp) > 1 else dp[0]
+                    break
+            return NamedSharding(self.mesh, P(*parts))
+
+        return jax.tree_util.tree_map_with_path(spec, params_tree)
+
+    def batch(self, batch_tree) -> Any:
+        def spec(_, leaf):
+            parts = [None] * leaf.ndim
+            if leaf.shape[0] % _axsize(self.mesh, self.plan.batch_axes) == 0:
+                parts[0] = self.plan.batch_axes
+            return NamedSharding(self.mesh, P(*parts))
+
+        return jax.tree_util.tree_map_with_path(spec, batch_tree)
+
+    def cache(self, cache_tree) -> Any:
+        """Decode cache: batch over data axes; KV seq over seq_axis (long
+        decode) else kv-heads over model; SSM states: d_inner over model."""
+        bsz_axes = self.plan.batch_axes
+
+        def spec(path, leaf):
+            name = _leaf_name(path).rsplit("/", 1)[-1]
+            nd = leaf.ndim
+            parts: list = [None] * nd
+            if nd == 0:
+                return NamedSharding(self.mesh, P())
+            # leading stacked-layer axis for seg caches: (R, B, ...)
+            boff = 1 if "segs" in _leaf_name(path) else 0
+            if nd > boff and leaf.shape[boff] % _axsize(self.mesh, bsz_axes) == 0:
+                parts[boff] = bsz_axes
+            if name in ("k", "v", "ck", "cv", "ckv", "krope"):
+                if self.plan.seq_axis and nd > boff + 1 and (
+                        leaf.shape[boff + 1] % _axsize(self.mesh, self.plan.seq_axis) == 0):
+                    parts[boff + 1] = self.plan.seq_axis
+                elif name in ("k", "v", "ck", "cv") and nd > boff + 2:
+                    h = leaf.shape[boff + 2]
+                    if self.plan.model_axis and h % self.tp == 0 and self.tp > 1:
+                        parts[boff + 2] = self.plan.model_axis
+            if name in ("conv", "ssm") and nd > boff + 1:
+                # (B, K-1, Din) / (B, Din, N): shard Din over model
+                din_ax = boff + 2 if name == "conv" else boff + 1
+                if din_ax < nd and leaf.shape[din_ax] % self.tp == 0 and self.tp > 1:
+                    parts[din_ax] = self.plan.model_axis
+            if name == "s" and nd >= boff + 4:  # rwkv (B, H, K, V)
+                if leaf.shape[boff + 1] % self.tp == 0 and self.tp > 1:
+                    parts[boff + 1] = self.plan.model_axis
+            if name == "enc_h":
+                parts = [None] * nd
+                if leaf.shape[0] % _axsize(self.mesh, bsz_axes) == 0:
+                    parts[0] = bsz_axes
+            return NamedSharding(self.mesh, P(*parts))
+
+        return jax.tree_util.tree_map_with_path(spec, cache_tree)
+
+
+def make_rules(mesh: Mesh, plan: ParallelPlan) -> Rules:
+    return Rules(mesh, plan)

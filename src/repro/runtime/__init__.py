@@ -1,0 +1,1 @@
+from .supervisor import InjectedFailure, Supervisor, SupervisorConfig  # noqa: F401

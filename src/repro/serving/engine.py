@@ -1,0 +1,59 @@
+"""Serving engine: batched prefill + greedy/temperature decode loop.
+
+Thin, deterministic, jit-cached: one compiled prefill per prompt length
+bucket and one compiled decode step reused for every token.  The decode
+step is exactly what the ``decode_32k`` / ``long_500k`` dry-run cells
+lower.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import ModelConfig, decode_step, init_cache, prefill
+from ..parallel.ctx import NO_PARALLEL, ParallelCtx
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, ctx: ParallelCtx = NO_PARALLEL,
+                 max_len: int = 512):
+        self.cfg = cfg
+        self.params = params
+        self.ctx = ctx
+        self.max_len = max_len
+        # cache donation: the KV cache is updated in place every step
+        self._prefill = jax.jit(
+            lambda p, b, c: prefill(cfg, ctx, p, b, c), donate_argnums=(2,))
+        self._decode = jax.jit(
+            lambda p, c, t: decode_step(cfg, ctx, p, c, t),
+            donate_argnums=(1,))
+
+    def generate(self, tokens: jax.Array, max_new_tokens: int = 16,
+                 temperature: float = 0.0, rng: Optional[jax.Array] = None,
+                 extra_inputs: Optional[dict] = None):
+        """tokens (B, T) i32 prompt.  Returns (B, max_new_tokens) i32."""
+        b, t = tokens.shape
+        assert t + max_new_tokens <= self.max_len, "increase max_len"
+        cache = init_cache(self.cfg, b, self.max_len)
+        batch = {"tokens": tokens}
+        if extra_inputs:
+            batch.update(extra_inputs)
+        logits, cache = self._prefill(self.params, batch, cache)
+
+        out = []
+        tok = self._sample(logits[:, -1], temperature, rng, 0)
+        for i in range(max_new_tokens):
+            out.append(tok)
+            logits, cache = self._decode(self.params, cache, tok)
+            tok = self._sample(logits[:, -1], temperature, rng, i + 1)
+        return jnp.concatenate(out, axis=-1)
+
+    def _sample(self, logits, temperature, rng, i):
+        if temperature <= 0.0 or rng is None:
+            return jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        key = jax.random.fold_in(rng, i)
+        return jax.random.categorical(
+            key, logits / temperature, -1)[:, None].astype(jnp.int32)

@@ -1,0 +1,2 @@
+from .step import make_eval_step, make_loss_fn, make_train_step  # noqa: F401
+from . import compress  # noqa: F401

@@ -1,0 +1,82 @@
+"""Train step builders: fused fwd+bwd+update, with microbatch accumulation.
+
+``make_train_step`` returns a pure function
+    (params, opt_state, batch) -> (params, opt_state, metrics)
+suitable for jit with in/out shardings from ``parallel.sharding.Rules``.
+
+Gradient accumulation: ``accum_steps > 1`` splits the global batch on axis 0
+and lax.scan's the fwd/bwd, summing grads — the standard way to fit a large
+global batch per optimizer step (and the hook where pipeline-parallel
+microbatching would attach).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..models import ModelConfig, train_loss
+from ..optim import adamw
+from ..parallel.ctx import ParallelCtx
+
+
+def make_loss_fn(cfg: ModelConfig, ctx: ParallelCtx):
+    def loss_fn(params, batch):
+        return train_loss(cfg, ctx, params, batch)
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, ctx: ParallelCtx,
+                    opt_cfg: adamw.AdamWConfig, accum_steps: int = 1):
+    loss_fn = make_loss_fn(cfg, ctx)
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            loss, metrics, grads = grads_of(params, batch)
+        else:
+            def micro(carry, mb):
+                g_acc, l_acc = carry
+                loss, _, grads = grads_of(params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, grads)
+                return (g_acc, l_acc + loss), None
+
+            def to_micro(x):
+                x = x.reshape((accum_steps, x.shape[0] // accum_steps)
+                              + x.shape[1:])
+                # keep the per-microbatch batch dim sharded over data axes
+                return ctx.shard(x, None, ctx.batch_axes,
+                                 *([None] * (x.ndim - 2)))
+
+            micro_batches = jax.tree.map(to_micro, batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), _ = jax.lax.scan(
+                micro, (g0, jnp.float32(0)), micro_batches)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = loss_sum / accum_steps
+            metrics = {"loss": loss}
+
+        new_params, new_opt, stats = adamw.update(
+            opt_cfg, grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics.update(stats)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, ctx: ParallelCtx):
+    loss_fn = make_loss_fn(cfg, ctx)
+
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(params, batch)
+        return metrics
+
+    return eval_step

@@ -1,0 +1,31 @@
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+if os.path.abspath(SRC) not in sys.path:
+    sys.path.insert(0, os.path.abspath(SRC))
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout: int = 600) -> str:
+    """Run ``code`` in a subprocess with n fake CPU devices.
+
+    Multi-device tests need XLA_FLAGS set before jax import, which cannot
+    happen inside an already-initialized test process.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.abspath(SRC)
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)], env=env,
+        capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+@pytest.fixture
+def multidev():
+    return run_with_devices

@@ -1,0 +1,69 @@
+"""Per-architecture smoke: every assigned arch instantiates a REDUCED
+same-family config and runs one train step + prefill + decode on CPU,
+asserting output shapes and no NaNs (assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke
+from repro.models import (count_active_params, count_params, derive_segments,
+                          init_cache, init_params)
+from repro.models import model as M
+from repro.parallel.ctx import NO_PARALLEL as ctx
+
+B, T = 2, 32
+
+
+def _batch(cfg, rng):
+    t_text = T - cfg.vision_tokens if cfg.family == "vlm" else T
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, t_text)), jnp.int32)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.family == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, cfg.encoder.seq_len, cfg.d_model)), jnp.float32)
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.asarray(
+            rng.normal(size=(B, cfg.vision_tokens, cfg.d_model)), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_and_decode(arch):
+    cfg = get_smoke(arch)
+    assert cfg.family == get_config(arch).family  # same family as full
+    rng = np.random.default_rng(0)
+    batch = _batch(cfg, rng)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    loss, metrics = jax.jit(lambda p, b: M.train_loss(cfg, ctx, p, b))(
+        params, batch)
+    assert np.isfinite(float(loss)), f"{arch}: loss not finite"
+    assert float(loss) > 0
+
+    cache = init_cache(cfg, B, max_len=T + 4)
+    pb = {k: v for k, v in batch.items() if k != "labels"}
+    logits, cache = jax.jit(lambda p, b, c: M.prefill(cfg, ctx, p, b, c))(
+        params, pb, cache)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all(), f"{arch}: prefill NaN"
+
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    logits2, cache = jax.jit(lambda p, c, t: M.decode_step(cfg, ctx, p, c, t))(
+        params, cache, tok)
+    assert logits2.shape == (B, 1, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits2)).all(), f"{arch}: decode NaN"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_shapes_only(arch):
+    """Full configs are touched only abstractly: eval_shape + segments."""
+    cfg = get_config(arch)
+    segs = derive_segments(cfg)
+    assert sum(len(p) * r for p, r in segs) == cfg.num_layers
+    n = count_params(cfg)
+    na = count_active_params(cfg)
+    assert 0 < na <= n
+    shapes = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    total = sum(int(np.prod(s.shape)) for s in jax.tree.leaves(shapes))
+    assert total == n, f"{arch}: analytic {n} != eval_shape {total}"

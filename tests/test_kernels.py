@@ -1,0 +1,143 @@
+"""Per-kernel shape/dtype sweeps vs the ref.py oracles (interpret mode).
+
+Comparisons: ray-box and the sort network are bit-exact (compare/select
+only); paths containing mul->add chains allow one-FMA ULP slack (XLA CPU
+contracts FMAs in the interpreted kernel body; Mosaic on real TPU rounds
+per-op — see kernels/common.round_stage).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Box, Triangle, make_ray
+from repro.core.stream import DatapathJob, make_jobs
+from repro.kernels import ref as kref
+from repro.kernels.common import LANES
+from repro.kernels.ops import (angular_kernel, euclidean_kernel,
+                               ray_box_kernel, ray_triangle_kernel,
+                               unified_datapath)
+
+SIZES = [1, 7, 128, 300]
+
+
+def _rand_rays(rng, n):
+    org = rng.uniform(-3, 3, (n, 3)).astype(np.float32)
+    dirs = rng.normal(size=(n, 3)).astype(np.float32)
+    return make_ray(jnp.asarray(org), jnp.asarray(dirs))
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_raybox_kernel_bitexact(n):
+    rng = np.random.default_rng(n)
+    ray = _rand_rays(rng, n)
+    lo = rng.uniform(-3, 2, (n, 4, 3)).astype(np.float32)
+    hi = lo + rng.uniform(0, 3, (n, 4, 3)).astype(np.float32)
+    boxes = Box(jnp.asarray(lo), jnp.asarray(hi))
+    k = ray_box_kernel(ray, boxes)
+    r = kref.ray_box_ref(ray, boxes)
+    np.testing.assert_array_equal(np.asarray(k.tmin), np.asarray(r.tmin))
+    np.testing.assert_array_equal(np.asarray(k.box_index), np.asarray(r.box_index))
+    np.testing.assert_array_equal(np.asarray(k.is_intersect), np.asarray(r.is_intersect))
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_raytri_kernel_allclose(n):
+    rng = np.random.default_rng(100 + n)
+    ray = _rand_rays(rng, n)
+    tri = Triangle(*(jnp.asarray(rng.normal(size=(n, 3)).astype(np.float32))
+                     for _ in range(3)))
+    k = ray_triangle_kernel(ray, tri)
+    r = kref.ray_triangle_ref(ray, tri)
+    np.testing.assert_allclose(np.asarray(k.t_num), np.asarray(r.t_num),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(k.t_denom), np.asarray(r.t_denom),
+                               rtol=1e-4, atol=1e-5)
+    agree = (np.asarray(k.hit) == np.asarray(r.hit)).mean()
+    assert agree > 0.999, f"hit bit agreement {agree}"
+
+
+@pytest.mark.parametrize("m,n,d", [(8, 8, 8), (55, 91, 37), (128, 128, 128),
+                                   (130, 260, 300)])
+def test_euclidean_kernel_sweep(m, n, d):
+    rng = np.random.default_rng(m * n)
+    q = rng.normal(size=(m, d)).astype(np.float32)
+    c = rng.normal(size=(n, d)).astype(np.float32)
+    k = euclidean_kernel(jnp.asarray(q), jnp.asarray(c))
+    r = kref.euclidean_direct_ref(q, c)
+    np.testing.assert_allclose(np.asarray(k), np.asarray(r),
+                               rtol=1e-4, atol=1e-4 * d ** 0.5)
+
+
+@pytest.mark.parametrize("m,n,d", [(8, 8, 8), (55, 91, 37), (128, 256, 64)])
+def test_angular_kernel_sweep(m, n, d):
+    rng = np.random.default_rng(m + n + d)
+    q = rng.normal(size=(m, d)).astype(np.float32)
+    c = rng.normal(size=(n, d)).astype(np.float32)
+    dk, nk_ = angular_kernel(jnp.asarray(q), jnp.asarray(c))
+    dr, nr = kref.angular_ref(q, c)
+    np.testing.assert_allclose(np.asarray(dk), np.asarray(dr),
+                               rtol=1e-4, atol=1e-5 * d ** 0.5)
+    np.testing.assert_allclose(np.asarray(nk_), np.asarray(nr), rtol=1e-5)
+
+
+def _mixed_jobs(rng, t):
+    n = t * LANES
+    jobs = make_jobs(n)
+    org = rng.normal(size=(n, 3)).astype(np.float32)
+    dirs = rng.normal(size=(n, 3)).astype(np.float32)
+    ray = make_ray(jnp.asarray(org), jnp.asarray(dirs))
+    lo = rng.normal(size=(n, 4, 3)).astype(np.float32)
+    hi = lo + rng.uniform(0.1, 2, (n, 4, 3)).astype(np.float32)
+    tri = Triangle(*(jnp.asarray(rng.normal(size=(n, 3)).astype(np.float32))
+                     for _ in range(3)))
+    ops = rng.integers(0, 4, size=t).astype(np.int32)
+    reset = rng.random(t) < 0.3
+    jobs = jobs._replace(
+        opcode=jnp.asarray(np.repeat(ops, LANES)), ray=ray,
+        boxes=Box(jnp.asarray(lo), jnp.asarray(hi)), triangle=tri,
+        vec_a=jnp.asarray(rng.normal(size=(n, 16)).astype(np.float32)),
+        vec_b=jnp.asarray(rng.normal(size=(n, 16)).astype(np.float32)),
+        reset_accum=jnp.asarray(np.repeat(reset, LANES)))
+    return jax.tree.map(lambda x: x.reshape((t, LANES) + x.shape[1:]), jobs)
+
+
+FIELD_OPCODE = {"tmin": 1, "box_index": 1, "is_intersect": 1,
+                "t_num": 0, "t_denom": 0, "triangle_hit": 0,
+                "euclidean_accumulator": 2,
+                "angular_dot_product": 3, "angular_norm": 3}
+
+
+def test_unified_kernel_vs_lane_stream_oracle():
+    """Mixed-opcode stream through the unified kernel == vmap'd in-order
+    scalar stream (per-lane accumulators, cross-beat)."""
+    rng = np.random.default_rng(9)
+    jobs = _mixed_jobs(rng, t=10)
+    out_k = unified_datapath(jobs)
+    out_r = kref.unified_ref(jobs)
+    op = np.asarray(out_r.opcode)
+    for name, valid_op in FIELD_OPCODE.items():
+        a = np.asarray(getattr(out_k, name), np.float64)
+        b = np.asarray(getattr(out_r, name), np.float64)
+        m = (op == valid_op)
+        if a.ndim == 3:
+            m = m[..., None]
+        np.testing.assert_allclose(np.where(m, a, 0), np.where(m, b, 0),
+                                   rtol=1e-4, atol=1e-4,
+                                   err_msg=f"field {name}")
+
+
+def test_unified_kernel_accumulator_across_tiles():
+    """Beats of a long Euclidean job land in the same lane across tiles."""
+    rng = np.random.default_rng(10)
+    t = 4
+    jobs = _mixed_jobs(rng, t)
+    ops = jnp.zeros((t, LANES), jnp.int32) + 2  # all euclidean
+    reset = jnp.zeros((t, LANES), bool).at[0].set(True)
+    jobs = jobs._replace(opcode=ops, reset_accum=reset)
+    out = unified_datapath(jobs)
+    a = np.asarray(jobs.vec_a, np.float64)
+    b = np.asarray(jobs.vec_b, np.float64)
+    expected = ((a - b) ** 2).sum(-1).cumsum(axis=0)
+    np.testing.assert_allclose(np.asarray(out.euclidean_accumulator),
+                               expected, rtol=1e-4)

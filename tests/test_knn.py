@@ -1,0 +1,57 @@
+"""kNN / retrieval on the generalized distance modes vs numpy exact."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cosine_similarity, euclidean_scores, knn
+from repro.core.knn import angular_scores
+
+
+@pytest.mark.parametrize("metric", ["euclidean", "angular", "cosine"])
+def test_knn_exact(metric):
+    rng = np.random.default_rng(0)
+    q = rng.normal(size=(17, 24)).astype(np.float32)
+    db = rng.normal(size=(211, 24)).astype(np.float32)
+    scores, idx = knn(jnp.asarray(q), jnp.asarray(db), k=5, metric=metric)
+    if metric == "euclidean":
+        ref = ((q[:, None] - db[None]) ** 2).sum(-1)
+        ref_idx = np.argsort(ref, axis=1)[:, :5]
+    elif metric == "angular":
+        ref = q @ db.T
+        ref_idx = np.argsort(-ref, axis=1)[:, :5]
+    else:
+        ref = (q @ db.T) / (np.linalg.norm(q, axis=1)[:, None]
+                            * np.linalg.norm(db, axis=1)[None])
+        ref_idx = np.argsort(-ref, axis=1)[:, :5]
+    # compare score sets (ties can permute indices)
+    got = np.take_along_axis(ref, np.asarray(idx), axis=1)
+    want = np.take_along_axis(ref, ref_idx, axis=1)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_mxu_form_equals_beat_form():
+    """The MXU expansion ||q||^2 - 2qc + ||c||^2 equals the datapath's
+    multi-beat (a-b)^2 accumulation."""
+    from repro.core import euclidean_distance_sq
+    rng = np.random.default_rng(1)
+    q = rng.normal(size=(5, 40)).astype(np.float32)
+    c = rng.normal(size=(7, 40)).astype(np.float32)
+    mxu = np.asarray(euclidean_scores(jnp.asarray(q), jnp.asarray(c)))
+    for i in range(5):
+        beat = np.asarray(euclidean_distance_sq(
+            jnp.asarray(np.tile(q[i], (7, 1))), jnp.asarray(c)))
+        np.testing.assert_allclose(mxu[i], beat, rtol=1e-4, atol=1e-4)
+
+
+def test_cosine_external_divider():
+    """Eq. 8: cosine = dot / (||q|| ||c||) with the datapath outputs."""
+    rng = np.random.default_rng(2)
+    q = rng.normal(size=(4, 16)).astype(np.float32)
+    c = rng.normal(size=(9, 16)).astype(np.float32)
+    dots, norms = angular_scores(jnp.asarray(q), jnp.asarray(c))
+    cs = np.asarray(dots) / (np.linalg.norm(q, axis=1)[:, None]
+                             * np.sqrt(np.asarray(norms))[None])
+    np.testing.assert_allclose(
+        np.asarray(cosine_similarity(jnp.asarray(q), jnp.asarray(c))), cs,
+        rtol=1e-5)
+    assert (np.abs(cs) <= 1.0 + 1e-5).all()

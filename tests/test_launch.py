@@ -1,0 +1,88 @@
+"""Launch-layer units: HLO collective parser, mesh plans, model flops."""
+import jax
+import numpy as np
+
+from repro.configs import SHAPES, get_config
+from repro.launch import hlo_analysis as ha
+from repro.launch.mesh import make_plan
+
+HLO = """
+ENTRY %main {
+  %p0 = f32[256,128]{1,0} parameter(0)
+  %all-reduce = f32[256,128]{1,0} all-reduce(%p0), channel_id=1, replica_groups=[16,16]<=[256], use_global_device_ids=true, to_apply=%add
+  %ag = bf16[64,512]{1,0} all-gather(%p1), channel_id=2, replica_groups=[32,8]<=[256], dimensions={1}
+  %rs = f32[8,16]{1,0} reduce-scatter(%p2), channel_id=3, replica_groups=[1,4]<=[4], to_apply=%add
+  %cp = f32[64]{0} collective-permute(%p3), channel_id=4
+  %cp2 = f32[128]{0} collective-permute(%p3), source_target_pairs={{0,1}}
+  %a2a = f32[32,32]{1,0} all-to-all(%p4), channel_id=5, replica_groups={{0,1,2,3}}
+}
+"""
+
+
+def test_collective_parser_kinds_and_bytes():
+    stats = ha.parse_collectives(HLO)
+    assert stats["all-reduce"].count == 1
+    assert stats["all-reduce"].result_bytes == 256 * 128 * 4
+    # ring all-reduce over group size 16: 2*B*(15/16)
+    np.testing.assert_allclose(stats["all-reduce"].link_bytes,
+                               2 * 256 * 128 * 4 * 15 / 16)
+    assert stats["all-gather"].count == 1
+    assert stats["all-gather"].result_bytes == 64 * 512 * 2
+    np.testing.assert_allclose(stats["all-gather"].link_bytes,
+                               64 * 512 * 2 * 7 / 8)
+    assert stats["reduce-scatter"].link_bytes == 8 * 16 * 4 * 3
+    assert stats["all-to-all"].count == 1
+    np.testing.assert_allclose(stats["all-to-all"].link_bytes,
+                               32 * 32 * 4 * 3 / 4)
+    assert stats["collective-permute"].count == 2
+
+
+def test_roofline_terms_and_dominance():
+    terms = ha.roofline_terms(197e12, 819e9 * 2, 50e9 * 0.5)
+    assert abs(terms["compute_s"] - 1.0) < 1e-9
+    assert abs(terms["memory_s"] - 2.0) < 1e-9
+    assert abs(terms["collective_s"] - 0.5) < 1e-9
+    assert ha.dominant_term(terms) == "memory_s"
+
+
+def test_make_plan_policies():
+    small = get_config("smollm-360m")
+    big = get_config("deepseek-v3-671b")
+    p_small = make_plan(small, SHAPES["train_4k"], multi_pod=False)
+    p_big = make_plan(big, SHAPES["train_4k"], multi_pod=True)
+    assert p_small.fsdp_axes == () and p_big.fsdp_axes == ("pod", "data")
+    assert p_small.accum_steps == 8 and p_big.accum_steps == 8
+    assert p_big.moments_dtype == "bfloat16"
+    # long-context decode shards the sequence
+    jamba = get_config("jamba-1.5-large-398b")
+    p_long = make_plan(jamba, SHAPES["long_500k"], multi_pod=False)
+    assert p_long.seq_axis == ("data",)
+    p_dec = make_plan(jamba, SHAPES["decode_32k"], multi_pod=False)
+    assert p_dec.seq_axis is None and p_dec.accum_steps == 1
+
+
+def test_model_flops_definitions():
+    from repro.launch.dryrun import model_flops
+    from repro.models import count_active_params
+    cfg = get_config("phi3.5-moe-42b-a6.6b")
+    na = count_active_params(cfg)
+    assert na < 8e9  # active ~6.6B of 42B
+    tf = model_flops(cfg, SHAPES["train_4k"])
+    assert abs(tf - 6 * na * 256 * 4096) / tf < 1e-9
+    df = model_flops(cfg, SHAPES["decode_32k"])
+    assert abs(df - 2 * na * 128) / df < 1e-9
+
+
+def test_input_specs_are_abstract():
+    """input_specs never allocates: everything is ShapeDtypeStruct."""
+    from repro.configs import input_specs
+    for arch in ("whisper-small", "internvl2-2b", "deepseek-v3-671b"):
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            from repro.configs import applicable
+            if not applicable(cfg, shape):
+                continue
+            specs = input_specs(cfg, shape)
+            for leaf in jax.tree.leaves(
+                    specs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)):
+                assert isinstance(leaf, jax.ShapeDtypeStruct), leaf

@@ -1,0 +1,203 @@
+"""Model-layer unit tests: attention equivalences, decode-vs-full parity."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import MLAConfig, MambaConfig, ModelConfig, RWKVConfig
+from repro.models.attention import (chunked_causal_attention, gqa_apply,
+                                    gqa_decode, gqa_init, mla_apply,
+                                    mla_decode, mla_init)
+from repro.models.mamba import mamba_apply, mamba_init, mamba_state_shapes
+from repro.models.rwkv import (rwkv_channel_apply, rwkv_channel_init,
+                               rwkv_time_apply, rwkv_time_init)
+from repro.parallel.ctx import NO_PARALLEL as ctx
+
+
+def _naive_attention(q, k, v, causal, scale=None):
+    b, t, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    scale = scale or hd ** -0.5
+    qg = (q * scale).reshape(b, t, g, hkv, hd)
+    s = np.einsum("btghd,bshd->bghts", qg, k).astype(np.float64)
+    if causal:
+        mask = np.tril(np.ones((t, k.shape[1]), bool))
+        s = np.where(mask, s, -np.inf)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    o = np.einsum("bghts,bshd->bghtd", p, v)
+    return np.moveaxis(o, 3, 1).reshape(b, t, hq, v.shape[-1])
+
+
+def test_chunked_attention_vs_naive():
+    rng = np.random.default_rng(0)
+    for (t, s, hq, hkv, chunk, causal) in [
+            (16, 16, 4, 2, 4, True), (16, 16, 4, 4, 16, True),
+            (12, 20, 6, 3, 5, False), (33, 33, 2, 1, 8, True)]:
+        q = rng.normal(size=(2, t, hq, 8)).astype(np.float32)
+        k = rng.normal(size=(2, s, hkv, 8)).astype(np.float32)
+        v = rng.normal(size=(2, s, hkv, 8)).astype(np.float32)
+        got = chunked_causal_attention(jnp.asarray(q), jnp.asarray(k),
+                                       jnp.asarray(v), chunk=chunk,
+                                       causal=causal)
+        want = _naive_attention(q, k, v, causal and t == s)
+        if causal and t != s:
+            continue
+        np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4,
+                                   atol=2e-5, err_msg=str((t, s, hq, hkv)))
+
+
+def _gqa_cfg(**kw):
+    d = dict(name="t", family="dense", num_layers=1, d_model=32, num_heads=4,
+             num_kv_heads=2, d_ff=64, vocab_size=64, head_dim=8, attn_chunk=8)
+    d.update(kw)
+    return ModelConfig(**d)
+
+
+def test_gqa_decode_matches_full_forward():
+    """Prefill+decode over the cache == full forward at every position."""
+    cfg = _gqa_cfg()
+    p = gqa_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    t = 10
+    x = jnp.asarray(rng.normal(size=(2, t, 32)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(t), (2, t))
+    y_full, (k, v) = gqa_apply(cfg, ctx, p, x, pos)
+
+    s_max = t
+    ck = jnp.zeros((2, s_max, 2, 8), jnp.float32)
+    cv = jnp.zeros((2, s_max, 2, 8), jnp.float32)
+    outs = []
+    for i in range(t):
+        y_i, ck, cv = gqa_decode(cfg, ctx, p, x[:, i:i + 1], ck, cv,
+                                 jnp.int32(i))
+        outs.append(y_i)
+    y_step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_step), np.asarray(y_full),
+                               rtol=2e-3, atol=2e-4)
+
+
+def test_mla_absorb_equals_naive_decode():
+    """The weight-absorbed MLA decode == the naive expand-then-attend path."""
+    mla = MLAConfig(q_lora_rank=16, kv_lora_rank=12, qk_nope_head_dim=8,
+                    qk_rope_head_dim=4, v_head_dim=8)
+    cfg_n = _gqa_cfg(attention="mla", mla=mla)
+    cfg_a = _gqa_cfg(attention="mla",
+                     mla=dataclasses.replace(mla, absorb=True))
+    p = mla_init(jax.random.PRNGKey(0), cfg_n)
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(2, 1, 32)).astype(np.float32))
+    ckv = jnp.asarray(rng.normal(size=(2, 6, 12)).astype(np.float32)) * 0.3
+    krope = jnp.asarray(rng.normal(size=(2, 6, 4)).astype(np.float32)) * 0.3
+    y_n, _, _ = mla_decode(cfg_n, ctx, p, x, ckv, krope, jnp.int32(4))
+    y_a, _, _ = mla_decode(cfg_a, ctx, p, x, ckv, krope, jnp.int32(4))
+    np.testing.assert_allclose(np.asarray(y_a), np.asarray(y_n), rtol=2e-3,
+                               atol=2e-4)
+
+
+def test_mla_prefill_then_decode_consistent():
+    """mla_apply's latent cache feeds mla_decode correctly."""
+    mla = MLAConfig(q_lora_rank=16, kv_lora_rank=12, qk_nope_head_dim=8,
+                    qk_rope_head_dim=4, v_head_dim=8)
+    cfg = _gqa_cfg(attention="mla", mla=mla)
+    p = mla_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(3)
+    t = 8
+    x = jnp.asarray(rng.normal(size=(1, t, 32)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(t), (1, t))
+    y_full, (ckv, krope) = mla_apply(cfg, ctx, p, x, pos)
+    # decode position t-1 using the cache of 0..t-2
+    ckv_c = jnp.zeros((1, t, 12), jnp.float32).at[:, :t - 1].set(ckv[:, :t - 1])
+    kr_c = jnp.zeros((1, t, 4), jnp.float32).at[:, :t - 1].set(krope[:, :t - 1])
+    y_d, _, _ = mla_decode(cfg, ctx, p, x[:, t - 1:], ckv_c, kr_c,
+                           jnp.int32(t - 1))
+    np.testing.assert_allclose(np.asarray(y_d[:, 0]),
+                               np.asarray(y_full[:, -1]), rtol=2e-3, atol=3e-4)
+
+
+def _mamba_cfg():
+    return ModelConfig(name="t", family="ssm", num_layers=1, d_model=16,
+                       num_heads=1, num_kv_heads=1, d_ff=32, vocab_size=64,
+                       layer_pattern=("mamba",),
+                       mamba=MambaConfig(d_state=4, d_conv=3, expand=2, chunk=4))
+
+
+def test_mamba_stepwise_equals_full():
+    cfg = _mamba_cfg()
+    p = mamba_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(4)
+    t = 11
+    x = jnp.asarray(rng.normal(size=(2, t, 16)).astype(np.float32))
+    y_full, _ = mamba_apply(cfg, ctx, p, x)
+    conv_s, ssm_s = mamba_state_shapes(cfg, 2)
+    conv = jnp.zeros(conv_s, jnp.float32)
+    ssm = jnp.zeros(ssm_s, jnp.float32)
+    outs = []
+    for i in range(t):
+        y_i, (conv, ssm) = mamba_apply(cfg, ctx, p, x[:, i:i + 1],
+                                       ssm_state=ssm, conv_state=conv)
+        outs.append(y_i)
+    y_step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_step), np.asarray(y_full),
+                               rtol=2e-3, atol=2e-4)
+
+
+def _rwkv_cfg(chunk=4):
+    return ModelConfig(name="t", family="ssm", num_layers=1, d_model=16,
+                       num_heads=2, num_kv_heads=2, d_ff=32, vocab_size=64,
+                       layer_pattern=("rwkv",),
+                       rwkv=RWKVConfig(head_size=8, decay_lora=4, chunk=chunk))
+
+
+def test_rwkv_stepwise_equals_full():
+    cfg = _rwkv_cfg()
+    p = rwkv_time_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(5)
+    t = 9
+    x = jnp.asarray(rng.normal(size=(2, t, 16)).astype(np.float32))
+    y_full, (xt, s) = rwkv_time_apply(cfg, ctx, p, x)
+    state = jnp.zeros((2, 2, 8, 8), jnp.float32)
+    x_prev = jnp.zeros((2, 16), jnp.float32)
+    outs = []
+    for i in range(t):
+        y_i, (x_prev, state) = rwkv_time_apply(cfg, ctx, p, x[:, i:i + 1],
+                                               state=state, x_prev=x_prev)
+        outs.append(y_i)
+    y_step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_step), np.asarray(y_full),
+                               rtol=2e-3, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(s), rtol=2e-3,
+                               atol=2e-4)
+
+
+def test_rwkv_chunk_size_invariance():
+    """Chunked wkv (MXU form) must not depend on the chunk size."""
+    rng = np.random.default_rng(6)
+    t = 12
+    x = jnp.asarray(rng.normal(size=(1, t, 16)).astype(np.float32))
+    outs = []
+    for chunk in (1, 3, 4, 12):
+        cfg = _rwkv_cfg(chunk)
+        p = rwkv_time_init(jax.random.PRNGKey(0), cfg)
+        y, _ = rwkv_time_apply(cfg, ctx, p, x)
+        outs.append(np.asarray(y))
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=2e-3, atol=2e-4)
+
+
+def test_rwkv_channel_shift_state():
+    cfg = _rwkv_cfg()
+    p = rwkv_channel_init(jax.random.PRNGKey(1), cfg)
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(1, 6, 16)).astype(np.float32))
+    y_full, x_last = rwkv_channel_apply(cfg, ctx, p, x)
+    # stepwise
+    xp = jnp.zeros((1, 16), jnp.float32)
+    outs = []
+    for i in range(6):
+        y_i, xp = rwkv_channel_apply(cfg, ctx, p, x[:, i:i + 1], x_prev=xp)
+        outs.append(y_i)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                               np.asarray(y_full), rtol=2e-3, atol=2e-4)

@@ -1,0 +1,87 @@
+"""Hypothesis property tests on the datapath's invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Box, make_ray, quadsort, ray_box_test,
+                        euclidean_distance_sq, angular_distance_parts)
+
+# subnormals excluded: XLA (CPU and TPU alike) flushes them to zero, so a
+# comparator sees 1.4e-45 == 0.0 — correct under FTZ, "unsorted" to numpy.
+finite = st.floats(min_value=-1e6, max_value=1e6, allow_nan=False,
+                   width=32, allow_subnormal=False)
+
+
+@given(st.lists(finite, min_size=4, max_size=4))
+@settings(max_examples=200, deadline=None)
+def test_quadsort_sorts_and_permutes(keys):
+    k = jnp.asarray([keys], jnp.float32)
+    idx = jnp.asarray([[0, 1, 2, 3]], jnp.int32)
+    sk, si = quadsort(k, idx)
+    sk, si = np.asarray(sk[0]), np.asarray(si[0])
+    assert (sk[:-1] <= sk[1:]).all()  # sorted
+    assert sorted(si.tolist()) == [0, 1, 2, 3]  # a permutation
+    # payload consistency: sorted keys are the original keys at si
+    np.testing.assert_array_equal(sk, np.asarray(keys, np.float32)[si])
+
+
+@given(st.integers(1, 64), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_euclidean_nonneg_symmetric_zero(dim, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(3, dim)).astype(np.float32)
+    b = rng.normal(size=(3, dim)).astype(np.float32)
+    dab = np.asarray(euclidean_distance_sq(jnp.asarray(a), jnp.asarray(b)))
+    dba = np.asarray(euclidean_distance_sq(jnp.asarray(b), jnp.asarray(a)))
+    daa = np.asarray(euclidean_distance_sq(jnp.asarray(a), jnp.asarray(a)))
+    assert (dab >= 0).all()
+    np.testing.assert_allclose(dab, dba, rtol=1e-6)
+    np.testing.assert_allclose(daa, 0.0, atol=1e-6)
+
+
+@given(st.integers(1, 48), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_angular_matches_numpy_any_dim(dim, seed):
+    """Multi-beat accumulation == direct sum for arbitrary dimension."""
+    rng = np.random.default_rng(seed)
+    q = rng.normal(size=(2, dim)).astype(np.float32)
+    c = rng.normal(size=(2, dim)).astype(np.float32)
+    dot, nrm = angular_distance_parts(jnp.asarray(q), jnp.asarray(c))
+    np.testing.assert_allclose(np.asarray(dot), (q * c).sum(-1), rtol=2e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(nrm), (c * c).sum(-1), rtol=2e-5)
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_raybox_scale_invariance(seed):
+    """Scaling the scene and ray origin uniformly scales tmin."""
+    rng = np.random.default_rng(seed)
+    org = rng.uniform(-2, 2, (1, 3)).astype(np.float32)
+    dirs = rng.normal(size=(1, 3)).astype(np.float32)
+    lo = rng.uniform(-2, 1, (1, 4, 3)).astype(np.float32)
+    hi = lo + rng.uniform(0.1, 2, (1, 4, 3)).astype(np.float32)
+    s = 4.0  # power of two: exact in fp
+    r1 = ray_box_test(make_ray(jnp.asarray(org), jnp.asarray(dirs)),
+                      Box(jnp.asarray(lo), jnp.asarray(hi)))
+    r2 = ray_box_test(make_ray(jnp.asarray(org * s), jnp.asarray(dirs)),
+                      Box(jnp.asarray(lo * s), jnp.asarray(hi * s)))
+    np.testing.assert_array_equal(np.asarray(r1.is_intersect),
+                                  np.asarray(r2.is_intersect))
+    hit = np.asarray(r1.is_intersect)
+    np.testing.assert_allclose(np.asarray(r2.tmin)[hit],
+                               np.asarray(r1.tmin)[hit] * s, rtol=1e-6)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 16))
+@settings(max_examples=30, deadline=None)
+def test_mask_equals_truncation(seed, dim):
+    """Masked 16-lane beat == computing on the truncated vector."""
+    from repro.core.datapath import euclidean_partial
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(16,)).astype(np.float32)
+    b = rng.normal(size=(16,)).astype(np.float32)
+    mask = jnp.asarray(np.arange(16) < dim)
+    full = euclidean_partial(jnp.asarray(a), jnp.asarray(b), mask)
+    trunc = ((a[:dim] - b[:dim]) ** 2).sum()
+    np.testing.assert_allclose(np.asarray(full), trunc, rtol=1e-5)

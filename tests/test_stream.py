@@ -1,0 +1,98 @@
+"""Unified-stream semantics (Table V): accumulator isolation, interleaving,
+reset behaviour, opcode-selected output validity."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (OP_ANGULAR, OP_EUCLIDEAN, OP_QUADBOX, OP_TRIANGLE,
+                        init_datapath_state, unified_stream)
+from repro.core.stream import make_jobs
+
+
+def _vec_jobs(seq):
+    """Build a job stream from a list of (opcode, a, b, reset) tuples."""
+    n = len(seq)
+    jobs = make_jobs(n)
+    op = jnp.asarray([s[0] for s in seq], jnp.int32)
+    va = jnp.zeros((n, 16), jnp.float32)
+    vb = jnp.zeros((n, 16), jnp.float32)
+    reset = jnp.asarray([bool(s[3]) for s in seq])
+    for i, s in enumerate(seq):
+        a = np.zeros(16, np.float32); a[:len(s[1])] = s[1]
+        b = np.zeros(16, np.float32); b[:len(s[2])] = s[2]
+        va = va.at[i].set(jnp.asarray(a))
+        vb = vb.at[i].set(jnp.asarray(b))
+    return jobs._replace(opcode=op, vec_a=va, vec_b=vb, reset_accum=reset)
+
+
+def test_multibeat_accumulation():
+    """A 32-dim Euclidean job split into two 16-lane beats accumulates."""
+    a1, b1 = [1.0] * 16, [0.0] * 16
+    a2, b2 = [2.0] * 16, [0.0] * 16
+    jobs = _vec_jobs([(OP_EUCLIDEAN, a1, b1, True),
+                      (OP_EUCLIDEAN, a2, b2, False)])
+    _, out = unified_stream(jobs)
+    assert np.isclose(out.euclidean_accumulator[0], 16.0)
+    assert np.isclose(out.euclidean_accumulator[1], 16.0 + 64.0)
+
+
+def test_mode_isolation_interleaved():
+    """Interleaving angular jobs (and box/tri jobs) between Euclidean beats
+    must not disturb the Euclidean accumulator, and vice versa (Table V:
+    'safe to interleave ... over an indefinite time frame')."""
+    jobs = _vec_jobs([
+        (OP_EUCLIDEAN, [1.0], [0.0], True),     # euclid acc = 1
+        (OP_ANGULAR, [3.0], [2.0], True),       # dot=6, norm=4
+        (OP_QUADBOX, [], [], False),            # unrelated mode
+        (OP_EUCLIDEAN, [2.0], [0.0], False),    # euclid acc = 1+4
+        (OP_TRIANGLE, [], [], False),
+        (OP_ANGULAR, [1.0], [5.0], False),      # dot=6+5, norm=4+25
+    ])
+    _, out = unified_stream(jobs)
+    assert np.isclose(out.euclidean_accumulator[3], 5.0)
+    assert np.isclose(out.angular_dot_product[5], 11.0)
+    assert np.isclose(out.angular_norm[5], 29.0)
+
+
+def test_reset_clears_only_own_mode():
+    jobs = _vec_jobs([
+        (OP_EUCLIDEAN, [2.0], [0.0], True),   # euclid = 4
+        (OP_ANGULAR, [1.0], [1.0], True),     # dot = 1
+        (OP_ANGULAR, [1.0], [1.0], True),     # reset again: dot = 1 (not 2)
+        (OP_EUCLIDEAN, [1.0], [0.0], False),  # euclid = 5 (untouched by ang resets)
+    ])
+    _, out = unified_stream(jobs)
+    assert np.isclose(out.angular_dot_product[2], 1.0)
+    assert np.isclose(out.euclidean_accumulator[3], 5.0)
+
+
+def test_reset_propagated_to_output():
+    jobs = _vec_jobs([(OP_EUCLIDEAN, [1.0], [0.0], True),
+                      (OP_EUCLIDEAN, [1.0], [0.0], False)])
+    _, out = unified_stream(jobs)
+    assert bool(out.reset_accum[0]) and not bool(out.reset_accum[1])
+
+
+def test_mask_lanes():
+    """The validity bitmask drops dead lanes (vectors of lesser dimension)."""
+    jobs = _vec_jobs([(OP_EUCLIDEAN, [1.0] * 16, [0.0] * 16, True)])
+    mask = jnp.asarray(np.arange(16) < 5)[None]
+    jobs = jobs._replace(mask=mask)
+    _, out = unified_stream(jobs)
+    assert np.isclose(out.euclidean_accumulator[0], 5.0)
+
+
+def test_angular_uses_eight_lanes():
+    """OpAngular processes only 8 lanes/beat (each needs 2 multipliers)."""
+    a = [1.0] * 16
+    jobs = _vec_jobs([(OP_ANGULAR, a, a, True)])
+    _, out = unified_stream(jobs)
+    assert np.isclose(out.angular_dot_product[0], 8.0)  # not 16
+
+
+def test_state_carries_across_streams():
+    """Explicit state threading: a stream can be split across calls."""
+    jobs1 = _vec_jobs([(OP_EUCLIDEAN, [3.0], [0.0], True)])
+    jobs2 = _vec_jobs([(OP_EUCLIDEAN, [4.0], [0.0], False)])
+    st, _ = unified_stream(jobs1, init_datapath_state())
+    _, out = unified_stream(jobs2, st)
+    assert np.isclose(out.euclidean_accumulator[0], 25.0)
