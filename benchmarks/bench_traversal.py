@@ -1,5 +1,17 @@
 """BVH4 build + traversal benchmark: the RayCore-style workload the
-datapath serves (quad-box + triangle jobs per ray)."""
+datapath serves (quad-box + triangle jobs per ray).
+
+Runs the same ray batch through both traversal engines side by side:
+
+* ``per-ray``   — vmapped per-ray ``while_loop`` (``trace_rays``), where the
+  whole batch iterates until the slowest ray drains, and
+* ``wavefront`` — batch-level frontier loop (``trace_wavefront``), one
+  batched OpQuadbox job per round,
+
+plus the wavefront any-hit mode (occlusion queries retire on first hit).
+Rows report rays/sec and the per-ray datapath job counts so scheduling
+improvements show up as measurements, not guesses.
+"""
 from __future__ import annotations
 
 import time
@@ -8,7 +20,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Triangle, build_bvh4, bvh4_depth, make_ray, trace_rays
+from repro.core import (Triangle, build_bvh4, bvh4_depth, make_ray,
+                        trace_rays, trace_wavefront)
+
+
+def _time(fn, rays):
+    rec = fn(rays)
+    jax.block_until_ready(rec.t)
+    t0 = time.perf_counter()
+    rec = fn(rays)
+    jax.block_until_ready(rec.t)
+    return rec, time.perf_counter() - t0
 
 
 def run(rows):
@@ -31,15 +53,20 @@ def run(rows):
     org = rng.uniform(-3, -2, (n_rays, 3)).astype(np.float32)
     tgt = rng.uniform(-0.5, 0.5, (n_rays, 3)).astype(np.float32)
     rays = make_ray(jnp.asarray(org), jnp.asarray(tgt - org))
-    fn = jax.jit(lambda r: trace_rays(bvh, r, depth))
-    rec = fn(rays)
-    jax.block_until_ready(rec.t)
-    t0 = time.perf_counter()
-    rec = fn(rays)
-    jax.block_until_ready(rec.t)
-    dt = time.perf_counter() - t0
-    rows.append(("traversal_256rays_2k_tris", dt / n_rays * 1e6,
-                 f"rays_per_s={n_rays / dt:.3e};"
-                 f"quadbox_jobs_per_ray={float(rec.quadbox_jobs.mean()):.1f};"
-                 f"tri_jobs_per_ray={float(rec.triangle_jobs.mean()):.1f};"
-                 f"hit_rate={float(rec.hit.mean()):.2f}"))
+
+    engines = {
+        "per_ray": jax.jit(lambda r: trace_rays(bvh, r, depth)),
+        "wavefront": jax.jit(lambda r: trace_wavefront(bvh, r, depth)),
+        "wavefront_anyhit": jax.jit(
+            lambda r: trace_wavefront(bvh, r, depth, ray_type="any")),
+    }
+    for name, fn in engines.items():
+        rec, dt = _time(fn, rays)
+        extra = ""
+        if hasattr(rec, "rounds"):
+            extra = f";batched_rounds={int(rec.rounds)}"
+        rows.append((f"traversal_{name}_256rays_2k_tris", dt / n_rays * 1e6,
+                     f"rays_per_s={n_rays / dt:.3e};"
+                     f"quadbox_jobs_per_ray={float(rec.quadbox_jobs.mean()):.1f};"
+                     f"tri_jobs_per_ray={float(rec.triangle_jobs.mean()):.1f};"
+                     f"hit_rate={float(rec.hit.mean()):.2f}" + extra))

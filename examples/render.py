@@ -1,5 +1,9 @@
-"""Render a sphere made of triangles with the BVH4 + unified datapath
-(closest-hit traversal; quad-box and triangle jobs) and write a PGM image.
+"""Render a triangle-mesh sphere over a ground plane with the BVH4 +
+unified datapath and write a PGM image.
+
+Primary rays are closest-hit wavefront queries; hard shadows come from
+extent-limited shadow rays (any-hit wavefront queries toward a point light,
+``repro.core.wavefront``) — the sphere casts a shadow onto the plane.
 
 Run:  PYTHONPATH=src python examples/render.py [out.pgm]
 """
@@ -8,7 +12,8 @@ import sys
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Triangle, build_bvh4, bvh4_depth, make_ray, trace_rays
+from repro.core import (Triangle, build_bvh4, bvh4_depth, make_ray,
+                        occlusion_test, trace_wavefront)
 
 
 def icosphere(subdiv=3):
@@ -36,43 +41,78 @@ def icosphere(subdiv=3):
     return arr
 
 
-def main():
-    out_path = sys.argv[1] if len(sys.argv) > 1 else "/tmp/render.pgm"
-    tris = icosphere(3)
-    n = len(tris)
+def ground_plane(y=-1.0, half=6.0):
+    """Two triangles spanning a square at height y."""
+    c = [[-half, y, -half], [half, y, -half], [half, y, half], [-half, y, half]]
+    c = np.asarray(c, np.float32)
+    return np.stack([np.stack([c[0], c[2], c[1]]),
+                     np.stack([c[0], c[3], c[2]])])
+
+
+def build_scene():
+    tris = np.concatenate([icosphere(3), ground_plane()], axis=0)
     # two-sided: add reversed winding (the datapath culls backfaces)
     tris = np.concatenate([tris, tris[:, ::-1, :]], axis=0)
     tri = Triangle(jnp.asarray(tris[:, 0]), jnp.asarray(tris[:, 1]),
                    jnp.asarray(tris[:, 2]))
+    return tris, tri
+
+
+def main():
+    out_path = sys.argv[1] if len(sys.argv) > 1 else "/tmp/render.pgm"
+    tris, tri = build_scene()
     bvh = build_bvh4(tri)
     depth = bvh4_depth(len(tris))
-    print(f"scene: {len(tris)} triangles, BVH4 depth {depth}")
+    print(f"scene: {len(tris)} triangles (sphere + ground), BVH4 depth {depth}")
 
+    # pinhole camera above the sphere looking slightly down: sphere, ground
+    # and the sphere's cast shadow are all in frame
     res = 96
-    ys, xs = np.meshgrid(np.linspace(1.4, -1.4, res),
-                         np.linspace(-1.4, 1.4, res), indexing="ij")
-    org = np.stack([xs.ravel(), ys.ravel(), np.full(res * res, -3.0)],
-                   -1).astype(np.float32)
-    dirs = np.tile(np.asarray([[0, 0, 1]], np.float32), (res * res, 1))
+    eye = np.asarray([0.0, 1.0, -3.6], np.float32)
+    ys, xs = np.meshgrid(np.linspace(0.75, -0.75, res),
+                         np.linspace(-0.75, 0.75, res), indexing="ij")
+    fwd = np.asarray([0.0, -0.35, 1.0]); fwd /= np.linalg.norm(fwd)
+    right = np.asarray([1.0, 0.0, 0.0])
+    up = np.cross(fwd, right)
+    dirs = (fwd[None] + xs.ravel()[:, None] * right[None]
+            + ys.ravel()[:, None] * up[None]).astype(np.float32)
+    org = np.tile(eye[None], (res * res, 1))
     rays = make_ray(jnp.asarray(org), jnp.asarray(dirs))
-    rec = trace_rays(bvh, rays, depth)
+    rec = trace_wavefront(bvh, rays, depth)
 
-    # shade by normal . light
     hit = np.asarray(rec.hit)
     t = np.asarray(rec.t)
-    pts = org + t[:, None] * dirs
-    normal = pts / np.maximum(np.linalg.norm(pts, axis=1, keepdims=True), 1e-6)
-    light = np.asarray([0.5, 0.7, -0.6])
-    light = light / np.linalg.norm(light)
-    shade = np.clip(normal @ light, 0.1, 1.0)
-    img = np.where(hit, (40 + 215 * shade), 12).reshape(res, res)
+    tri_idx = np.asarray(rec.tri_index)
+    pts = org + np.where(hit, t, 0.0)[:, None] * dirs
+
+    # geometric normal of the hit triangle, flipped toward the camera
+    v = tris[np.maximum(tri_idx, 0)]  # (R, 3verts, 3)
+    n = np.cross(v[:, 1] - v[:, 0], v[:, 2] - v[:, 0])
+    n /= np.maximum(np.linalg.norm(n, axis=1, keepdims=True), 1e-12)
+    n = np.where((n * dirs).sum(1, keepdims=True) > 0, -n, n)
+
+    # hard shadows: extent-limited any-hit rays toward a point light
+    light_pos = np.asarray([2.0, 3.0, -2.0], np.float32)
+    to_light = light_pos - pts
+    dist = np.linalg.norm(to_light, axis=1)
+    ldir = to_light / np.maximum(dist[:, None], 1e-12)
+    shadow_org = (pts + 1e-3 * n).astype(np.float32)
+    shadow_rays = make_ray(jnp.asarray(shadow_org), jnp.asarray(ldir),
+                           extent=jnp.asarray(dist.astype(np.float32)))
+    occluded = np.asarray(occlusion_test(bvh, shadow_rays, depth, t_min=1e-3))
+
+    lambert = np.clip((n * ldir).sum(1), 0.0, 1.0)
+    shade = 0.12 + 0.88 * lambert * np.where(hit & occluded, 0.15, 1.0)
+    img = np.where(hit, 20 + 235 * shade, 8).reshape(res, res)
 
     with open(out_path, "wb") as f:
         f.write(f"P5\n{res} {res}\n255\n".encode())
-        f.write(img.astype(np.uint8).tobytes())
-    print(f"hits: {hit.sum()}/{hit.size}  "
+        f.write(np.clip(img, 0, 255).astype(np.uint8).tobytes())
+    n_shadow = int((hit & occluded).sum())
+    print(f"hits: {hit.sum()}/{hit.size}  shadowed: {n_shadow}  "
           f"avg quadbox jobs/ray: {float(rec.quadbox_jobs.mean()):.1f}  "
-          f"avg triangle jobs/ray: {float(rec.triangle_jobs.mean()):.1f}")
+          f"avg triangle jobs/ray: {float(rec.triangle_jobs.mean()):.1f}  "
+          f"wavefront rounds: {int(rec.rounds)}")
     print(f"wrote {out_path}")
 
 

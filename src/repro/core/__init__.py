@@ -34,4 +34,17 @@ from .datapath import (  # noqa: F401
 from .stream import DatapathJob, DatapathOutput, make_jobs, unified_stream  # noqa: F401
 from .bvh import BVH4, build_bvh4, bvh4_depth, child_boxes  # noqa: F401
 from .traversal import HitRecord, trace_ray, trace_rays  # noqa: F401
-from .knn import angular_scores, cosine_similarity, euclidean_scores, knn  # noqa: F401
+from .wavefront import (  # noqa: F401
+    RAY_TYPES,
+    WavefrontRecord,
+    occlusion_test,
+    trace_wavefront,
+)
+from .knn import (  # noqa: F401
+    angular_scores,
+    cosine_similarity,
+    euclidean_scores,
+    knn,
+    radius_count,
+    radius_search,
+)

@@ -50,6 +50,49 @@ def cosine_similarity(queries: jax.Array, database: jax.Array) -> jax.Array:
     return dots / denom
 
 
+def radius_search(queries: jax.Array, database: jax.Array, radius: float,
+                  k: int, metric: str = "euclidean"):
+    """Fixed-radius neighbor query: up to ``k`` neighbors within ``radius``.
+
+    This is the vector-search twin of the traversal engine's extent-limited
+    shadow rays (``repro.core.wavefront``): just as a shadow ray accepts any
+    hit with ``t <= extent``, a radius query accepts any candidate with
+    distance <= radius — the RTNN mapping of neighbor search onto
+    ray-tracing-style range-limited queries.
+
+    Returns ``(scores, indices, within)``: ``scores``/``indices`` are the
+    (padded) top-k by proximity, ``within`` marks which of the k actually
+    fall inside the radius.  ``scores`` are squared distances for euclidean
+    (ascending) and similarities for cosine (descending, ``radius`` is the
+    minimum similarity).
+    """
+    if metric == "euclidean":
+        d = euclidean_scores(queries, database)
+        inside = d <= radius * radius
+        neg, idx = jax.lax.top_k(jnp.where(inside, -d, -jnp.inf), k)
+        return -neg, idx, jnp.isfinite(neg)
+    if metric == "cosine":
+        sims = cosine_similarity(queries, database)
+        inside = sims >= radius
+        top, idx = jax.lax.top_k(jnp.where(inside, sims, -jnp.inf), k)
+        return top, idx, jnp.isfinite(top)
+    raise ValueError(f"unknown radius_search metric: {metric}")
+
+
+def radius_count(queries: jax.Array, database: jax.Array, radius: float,
+                 metric: str = "euclidean") -> jax.Array:
+    """Number of database points within ``radius`` of each query (the
+    occlusion-test analogue: "does anything fall inside the extent" plus
+    multiplicity).  (M, D), (N, D) -> (M,) i32."""
+    if metric == "euclidean":
+        inside = euclidean_scores(queries, database) <= radius * radius
+    elif metric == "cosine":
+        inside = cosine_similarity(queries, database) >= radius
+    else:
+        raise ValueError(f"unknown radius_count metric: {metric}")
+    return jnp.sum(inside, axis=-1).astype(jnp.int32)
+
+
 def knn(queries: jax.Array, database: jax.Array, k: int, metric: str = "euclidean"):
     """Exact k-nearest-neighbour search on the datapath's distance modes.
 

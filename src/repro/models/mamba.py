@@ -154,7 +154,17 @@ def mamba_apply(cfg: ModelConfig, ctx, p, x, ssm_state=None, conv_state=None):
     xc, conv_state = _conv1d(p, x_in, conv_state)
     xc = jax.nn.silu(xc)
     dt, b, c = _ssm_params(cfg, p, xc)
+    # the selective scan is a time recurrence: gather seq for its operands
+    # (d_inner keeps its tensor-parallel sharding; the scan is pointwise
+    # over d_inner, only the time axis must not be partitioned)
+    dt = ctx.act_recurrent(dt, ctx.model_axis)
+    xc = ctx.act_recurrent(xc, ctx.model_axis)
+    b = ctx.act_recurrent(b)
+    c = ctx.act_recurrent(c)
     y, h_end = selective_scan(cfg, dt, b, c, xc, p, ssm_state)
+    # pin the scan's stacked output too: a seq-sharded consumer would
+    # propagate its sharding back into the scan body
+    y = ctx.act_recurrent(y, ctx.model_axis)
     y = (y.astype(dt_) * jax.nn.silu(z))
     y = ctx.act_btf(y)
     return y @ p["out_proj"].astype(dt_), (conv_state, h_end)

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..core.knn import angular_scores, cosine_similarity
+from ..parallel.compat import shard_map
 from .config import ModelConfig, MoEConfig
 from .layers import dense_init, split
 
@@ -201,7 +202,7 @@ def _moe_ep(cfg: ModelConfig, ctx, p, x_flat, weights, experts):
         return jax.lax.psum(y.astype(cd), model_axis)
 
     tok_spec = P(batch_axes if batch_axes else None, None)
-    out = jax.shard_map(
+    out = shard_map(
         shard_fn, mesh=mesh,
         in_specs=(tok_spec, tok_spec, tok_spec,
                   P(model_axis, None, None), P(model_axis, None, None),

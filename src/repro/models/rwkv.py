@@ -139,7 +139,10 @@ def rwkv_time_apply(cfg: ModelConfig, ctx, p, x, state=None, x_prev=None):
                     ctx.model_axis, None)
     v_h = ctx.shard(to_heads(v).astype(jnp.float32), ctx.batch_axes, None,
                     ctx.model_axis, None)
-    w_h = to_heads(w)
+    # like r/k/v above: the wkv recurrence needs seq gathered (act_recurrent
+    # rationale) -- without this constraint w_h stays seq-sharded and drags
+    # the scan into the partitioned-recurrence lowering
+    w_h = ctx.shard(to_heads(w), ctx.batch_axes, None, ctx.model_axis, None)
     u_h = p["u"].reshape(h, hs)
 
     s0 = (jnp.zeros((b, h, hs, hs), jnp.float32) if state is None else state)
@@ -168,6 +171,7 @@ def rwkv_time_apply(cfg: ModelConfig, ctx, p, x, state=None, x_prev=None):
         s_end = s
         y = jnp.concatenate(parts, axis=1)
     y = y[:, :t].reshape(b, t, d).astype(dt_)
+    y = ctx.act_recurrent(y)  # pin the scan output (act_recurrent rationale)
     y = _group_norm(p, y, h)
     y = y * jax.nn.silu(g)
     return y @ p["wo"].astype(dt_), (x[:, -1], s_end)

@@ -1,0 +1,15 @@
+"""Version-tolerant aliases for jax APIs that moved between 0.4.x and 0.5+.
+
+``jax.shard_map`` was promoted out of ``jax.experimental.shard_map`` after
+0.4.x; the keyword signature (``mesh=, in_specs=, out_specs=``) is identical
+in both homes, so a simple alias suffices.  The test-side twin of this shim
+is ``tests/conftest.py:make_test_mesh`` (for ``jax.sharding.AxisType``).
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map  # noqa: F401

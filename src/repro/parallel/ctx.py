@@ -67,11 +67,13 @@ class ParallelCtx:
         if self.mesh is None:
             return x
         fixed = []
+        used: set = set()  # a mesh axis may appear in at most one dim
         for d, a in enumerate(axes):
-            if a is None:
-                fixed.append(None)
-            elif self.axis_ok(a, x.shape[d]):
+            names = () if a is None else ((a,) if isinstance(a, str) else tuple(a))
+            if (a is not None and not (used & set(names))
+                    and self.axis_ok(a, x.shape[d])):
                 fixed.append(a)
+                used.update(names)
             else:
                 fixed.append(None)
         return jax.lax.with_sharding_constraint(
@@ -94,6 +96,19 @@ class ParallelCtx:
     def act_btv(self, x):
         """(batch, seq, vocab): vocab (logit) tensor-parallel."""
         return self.shard(x, self.batch_axes, None, self.model_axis)
+
+    def act_recurrent(self, x, *trailing):
+        """(batch, seq, ...) operand entering a time-recurrent scan (Mamba
+        SSM, RWKV wkv): the sequence axis must be *gathered*.  A recurrence
+        partitioned over time is collective-bound, and the partitioned
+        scan lowering miscompiles on older XLA (observed on jaxlib 0.4.36
+        CPU: interior positions of each seq shard combine the wrong
+        prefix).  Batch stays sharded; ``trailing`` gives the specs of the
+        dims after seq (pass ``self.model_axis`` for tensor-parallel dims
+        so only the time axis is gathered); unspecified dims replicate.
+        """
+        trailing = trailing + (None,) * (x.ndim - 2 - len(trailing))
+        return self.shard(x, self.batch_axes, None, *trailing)
 
     def kv_cache(self, x):
         """(batch, s_max, kv_heads, head_dim) KV cache; seq sharded when

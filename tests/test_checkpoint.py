@@ -72,10 +72,9 @@ def test_elastic_restore_resharded(multidev):
 import jax, jax.numpy as jnp, numpy as np, tempfile
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint import CheckpointManager
-mesh_a = jax.make_mesh((4, 2), ("data", "model"),
-                       axis_types=(jax.sharding.AxisType.Auto,) * 2)
-mesh_b = jax.make_mesh((2, 4), ("data", "model"),
-                       axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from conftest import make_test_mesh
+mesh_a = make_test_mesh((4, 2), ("data", "model"))
+mesh_b = make_test_mesh((2, 4), ("data", "model"))
 x = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
 xa = jax.device_put(x, NamedSharding(mesh_a, P("data", "model")))
 with tempfile.TemporaryDirectory() as d:

@@ -26,8 +26,8 @@ def test_compressed_crosspod_allreduce(multidev):
     multidev("""
 import jax, jax.numpy as jnp, numpy as np
 from repro.train.compress import compressed_crosspod_allreduce
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+from conftest import make_test_mesh
+mesh = make_test_mesh((2, 2, 2), ("pod", "data", "model"))
 rng = np.random.default_rng(0)
 
 # single-shot error bounded by quantization step

@@ -43,6 +43,34 @@ def test_mxu_form_equals_beat_form():
         np.testing.assert_allclose(mxu[i], beat, rtol=1e-4, atol=1e-4)
 
 
+def test_radius_search_matches_numpy():
+    """Fixed-radius query: membership and counts vs numpy exact."""
+    from repro.core import radius_count, radius_search
+    rng = np.random.default_rng(3)
+    q = rng.normal(size=(9, 16)).astype(np.float32)
+    db = rng.normal(size=(120, 16)).astype(np.float32)
+    radius = 5.0
+    ref_d = ((q[:, None] - db[None]) ** 2).sum(-1)
+    ref_inside = ref_d <= radius ** 2
+
+    counts = np.asarray(radius_count(jnp.asarray(q), jnp.asarray(db), radius))
+    np.testing.assert_array_equal(counts, ref_inside.sum(1))
+
+    k = 12
+    scores, idx, within = radius_search(jnp.asarray(q), jnp.asarray(db),
+                                        radius, k)
+    scores, idx, within = (np.asarray(scores), np.asarray(idx),
+                           np.asarray(within))
+    # every returned in-radius neighbor really is inside, and the valid
+    # count per query is min(k, true count)
+    for i in range(9):
+        got = set(idx[i][within[i]].tolist())
+        want = set(np.where(ref_inside[i])[0].tolist())
+        assert got <= want
+        assert within[i].sum() == min(k, ref_inside[i].sum())
+        assert (scores[i][within[i]] <= radius ** 2 + 1e-4).all()
+
+
 def test_cosine_external_divider():
     """Eq. 8: cosine = dot / (||q|| ||c||) with the datapath outputs."""
     rng = np.random.default_rng(2)

@@ -97,8 +97,8 @@ p = moe_init(jax.random.PRNGKey(0), cfg)
 rng = np.random.default_rng(1)
 x = jnp.asarray(rng.normal(size=(4, 8, 32)).astype(np.float32))
 y_dense, _ = moe_apply(cfg, NO_PARALLEL, p, x)
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from conftest import make_test_mesh
+mesh = make_test_mesh((2, 2), ("data", "model"))
 ctx = ParallelPlan(batch_axes=("data",)).ctx(mesh)
 y_ep, _ = jax.jit(lambda p, x: moe_apply(cfg, ctx, p, x))(p, x)
 np.testing.assert_allclose(np.asarray(y_dense), np.asarray(y_ep),

@@ -1,7 +1,10 @@
 """Hypothesis property tests on the datapath's invariants."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="install via requirements-dev.txt")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (Box, make_ray, quadsort, ray_box_test,
                         euclidean_distance_sq, angular_distance_parts)

@@ -15,8 +15,8 @@ from repro.configs import ARCH_IDS, get_config, SHAPES
 from repro.launch.mesh import make_plan
 from repro.models import init_params
 from repro.parallel.sharding import make_rules
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+from conftest import make_test_mesh
+mesh = make_test_mesh((2, 2, 2), ("pod", "data", "model"))
 for arch in ARCH_IDS:
     cfg = get_config(arch)
     plan = make_plan(cfg, SHAPES["train_4k"], multi_pod=True)
@@ -61,8 +61,8 @@ params = init_params(jax.random.PRNGKey(0), cfg)
 loss_fn = make_loss_fn(cfg, NO_PARALLEL)
 (l1, _), g1 = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
 
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from conftest import make_test_mesh
+mesh = make_test_mesh((2, 2), ("data", "model"))
 plan = ParallelPlan(batch_axes=("data",))
 rules = make_rules(mesh, plan)
 psh = rules.params(params)
@@ -97,8 +97,8 @@ toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 16)), jnp.int32)
 cache = init_cache(cfg, 1, 32)
 logits0, cache0 = jax.jit(lambda p,b,c: prefill(cfg, NO_PARALLEL, p, b, c))(
     params, {"tokens": toks}, cache)
-mesh = jax.make_mesh((4,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from conftest import make_test_mesh
+mesh = make_test_mesh((4,), ("data",))
 plan = ParallelPlan(batch_axes=("data",), model_axis=None, seq_axis=("data",))
 ctx = plan.ctx(mesh)
 rules = make_rules(mesh, plan)

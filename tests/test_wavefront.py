@@ -1,0 +1,199 @@
+"""Wavefront traversal engine vs the per-ray oracle and brute force.
+
+``trace_rays`` (per-ray while_loop) is the semantic oracle: the wavefront
+engine must *bit-match* it on closest-hit queries, including the per-ray
+job counters, so traversal optimizations stay measured rather than guessed.
+The brute-force all-triangles oracle pins both engines to the geometry.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Ray, Triangle, build_bvh4, bvh4_depth, make_ray,
+                        occlusion_test, ray_triangle_test, trace_rays,
+                        trace_wavefront)
+
+
+def _soup(rng, n_tri, scale=0.15):
+    ctr = rng.uniform(-1, 1, (n_tri, 3)).astype(np.float32)
+    d1 = rng.normal(scale=scale, size=(n_tri, 3)).astype(np.float32)
+    d2 = rng.normal(scale=scale, size=(n_tri, 3)).astype(np.float32)
+    return Triangle(a=jnp.asarray(ctr), b=jnp.asarray(ctr + d1),
+                    c=jnp.asarray(ctr + d2))
+
+
+def _rays(rng, n, extent=None):
+    org = rng.uniform(-3, -2, (n, 3)).astype(np.float32)
+    tgt = rng.uniform(-0.5, 0.5, (n, 3)).astype(np.float32)
+    return make_ray(jnp.asarray(org), jnp.asarray(tgt - org), extent)
+
+
+def _cross(rays, n_tri):
+    """(R,) rays x (N,) triangles -> (R, N) batched operands."""
+    n_rays = rays.origin.shape[0]
+    ray_b = Ray(*[jnp.broadcast_to(f[:, None, ...],
+                                   (n_rays, n_tri) + f.shape[1:])
+                  for f in rays])
+    return ray_b
+
+
+def brute_force(tri, rays, t_min=0.0):
+    """Test every ray against every triangle: (t, tri_index, any_valid)."""
+    n_rays, n_tri = rays.origin.shape[0], tri.a.shape[0]
+    tri_b = Triangle(*[jnp.broadcast_to(f[None], (n_rays, n_tri, 3))
+                       for f in tri])
+    tr = ray_triangle_test(_cross(rays, n_tri), tri_b)
+    t = np.asarray(tr.t_num) / np.asarray(tr.t_denom)
+    valid = (np.asarray(tr.hit) & (t <= np.asarray(rays.extent)[:, None])
+             & (t >= t_min))
+    t_masked = np.where(valid, t, np.inf)
+    best = t_masked.argmin(1)
+    t_best = t_masked[np.arange(n_rays), best]
+    return (t_best, np.where(np.isfinite(t_best), best, -1), valid.any(1))
+
+
+def _scene_and_rays(seed, n_tri, n_rays):
+    rng = np.random.default_rng(seed)
+    tri = _soup(rng, n_tri)
+    return tri, build_bvh4(tri), bvh4_depth(n_tri), _rays(rng, n_rays)
+
+
+# 230/100/513 leave 26/28/511 padded leaves; 3 makes the root a leaf parent.
+SCENES = [(7, 230, 64), (11, 100, 64), (13, 513, 48), (17, 3, 32)]
+
+
+@pytest.mark.parametrize("seed,n_tri,n_rays", SCENES)
+def test_closest_hit_bitmatches_per_ray_engine(seed, n_tri, n_rays):
+    tri, bvh, depth, rays = _scene_and_rays(seed, n_tri, n_rays)
+    ref = trace_rays(bvh, rays, depth)
+    got = trace_wavefront(bvh, rays, depth)
+    np.testing.assert_array_equal(np.asarray(got.t), np.asarray(ref.t))
+    np.testing.assert_array_equal(np.asarray(got.tri_index),
+                                  np.asarray(ref.tri_index))
+    np.testing.assert_array_equal(np.asarray(got.hit), np.asarray(ref.hit))
+
+
+@pytest.mark.parametrize("seed,n_tri,n_rays", SCENES[:3])
+def test_closest_hit_matches_brute_force(seed, n_tri, n_rays):
+    tri, bvh, depth, rays = _scene_and_rays(seed, n_tri, n_rays)
+    got = trace_wavefront(bvh, rays, depth)
+    t_ref, _, any_ref = brute_force(tri, rays)
+    # same stage math, but XLA may fuse mul+add into FMA differently across
+    # the two compilations, so the oracle comparison is ulp-tolerant (the
+    # engine-vs-engine comparison above stays bit-exact)
+    np.testing.assert_array_equal(np.asarray(got.hit), any_ref)
+    both = np.isfinite(t_ref)
+    np.testing.assert_allclose(np.asarray(got.t)[both], t_ref[both],
+                               rtol=1e-6)
+    assert np.asarray(got.hit).sum() > 0  # scene actually hit
+
+
+def test_degenerate_nan_slab_rays():
+    """Axis-aligned rays whose origins lie exactly on box planes produce
+    0 * inf = NaN slabs; comparator semantics must ignore them."""
+    # grid-aligned right triangles: box planes land on exact ray coordinates
+    xs, ys = np.meshgrid(np.arange(4, dtype=np.float32),
+                         np.arange(4, dtype=np.float32))
+    a = np.stack([xs.ravel(), ys.ravel(), np.zeros(16, np.float32)], -1)
+    b = a + np.asarray([1, 0, 0], np.float32)
+    c = a + np.asarray([0, 1, 0], np.float32)
+    tri = Triangle(jnp.asarray(a), jnp.asarray(c), jnp.asarray(b))
+    bvh = build_bvh4(tri)
+    depth = bvh4_depth(16)
+    # origins exactly on the lattice (slab distance 0 * inf), incl. -0.0 dir
+    org = np.asarray([[0.0, 0.0, -2.0], [1.0, 1.0, -2.0], [2.0, 0.5, -2.0],
+                      [0.5, 3.0, -2.0], [3.0, 3.0, -2.0]], np.float32)
+    dirs = np.asarray([[0, 0, 1], [0, 0, 1], [0.0, -0.0, 1],
+                       [-0.0, 0.0, 1], [0, 0, 1]], np.float32)
+    rays = make_ray(jnp.asarray(org), jnp.asarray(dirs))
+    ref = trace_rays(bvh, rays, depth)
+    got = trace_wavefront(bvh, rays, depth)
+    np.testing.assert_array_equal(np.asarray(got.t), np.asarray(ref.t))
+    np.testing.assert_array_equal(np.asarray(got.tri_index),
+                                  np.asarray(ref.tri_index))
+    # and both engines against the all-triangles oracle on the NaN slabs
+    t_ref, _, any_ref = brute_force(tri, rays)
+    np.testing.assert_array_equal(np.asarray(got.hit), any_ref)
+    both = np.isfinite(t_ref)
+    assert both.any()  # the grid-aligned rays really do hit
+    np.testing.assert_allclose(np.asarray(got.t)[both], t_ref[both],
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("seed,n_tri,n_rays", SCENES[:3])
+def test_any_hit_agrees_with_closest(seed, n_tri, n_rays):
+    tri, bvh, depth, rays = _scene_and_rays(seed, n_tri, n_rays)
+    closest = trace_wavefront(bvh, rays, depth, ray_type="closest")
+    anyhit = trace_wavefront(bvh, rays, depth, ray_type="any")
+    # same reachable-hit decision, potentially different (earlier) retirement
+    np.testing.assert_array_equal(np.asarray(anyhit.hit),
+                                  np.asarray(closest.hit))
+    h = np.asarray(anyhit.hit)
+    # any-hit's t is *some* accepted hit: never closer than the closest one
+    assert (np.asarray(anyhit.t)[h] >= np.asarray(closest.t)[h]).all()
+    # early termination can only reduce work
+    assert (np.asarray(anyhit.quadbox_jobs)
+            <= np.asarray(closest.quadbox_jobs)).all()
+
+
+def test_shadow_rays_extent_limited():
+    """Occlusion within extent must match the brute-force oracle, and
+    shrinking the extent below the first hit must clear the occlusion."""
+    tri, bvh, depth, rays = _scene_and_rays(23, 230, 64)
+    closest = trace_wavefront(bvh, rays, depth)
+    t_hit = np.where(np.asarray(closest.hit), np.asarray(closest.t), 1.0)
+
+    for scale, expect_hit in ((1.5, True), (0.5, False)):
+        limited = make_ray(rays.origin, rays.direction,
+                           extent=jnp.asarray(scale * t_hit))
+        occ = np.asarray(occlusion_test(bvh, limited, depth, t_min=0.0))
+        _, _, oracle = brute_force(tri, limited)
+        np.testing.assert_array_equal(occ, oracle)
+        h = np.asarray(closest.hit)
+        if expect_hit:
+            assert occ[h].all()
+        else:
+            assert not occ[h].any()
+
+    # t_min skips hits at the near end (self-intersection epsilon): with the
+    # cutoff between a ray's first and last hit, agreement with the
+    # brute-force oracle proves near hits are dropped and far ones kept
+    t_med = float(np.median(np.asarray(closest.t)[np.asarray(closest.hit)]))
+    shadow = trace_wavefront(bvh, rays, depth, ray_type="shadow",
+                             t_min=t_med)
+    _, _, oracle = brute_force(tri, rays, t_min=t_med)
+    np.testing.assert_array_equal(np.asarray(shadow.hit), oracle)
+    h = np.asarray(closest.hit)
+    assert (np.asarray(shadow.t)[np.asarray(shadow.hit)] >= t_med).all()
+    # the cutoff really bites: some rays lose their only hit
+    assert oracle[h].sum() < h.sum()
+
+
+@pytest.mark.parametrize("seed,n_tri,n_rays", SCENES)
+def test_job_accounting_consistent_between_engines(seed, n_tri, n_rays):
+    """quadbox/triangle job counters must agree exactly, so future traversal
+    optimizations are measured against a trusted baseline."""
+    _, bvh, depth, rays = _scene_and_rays(seed, n_tri, n_rays)
+    ref = trace_rays(bvh, rays, depth)
+    got = trace_wavefront(bvh, rays, depth)
+    np.testing.assert_array_equal(np.asarray(got.quadbox_jobs),
+                                  np.asarray(ref.quadbox_jobs))
+    np.testing.assert_array_equal(np.asarray(got.triangle_jobs),
+                                  np.asarray(ref.triangle_jobs))
+    # a ray is active for exactly quadbox_jobs consecutive rounds from round
+    # 0, so the batch-level round count is the max per-ray job count
+    assert int(got.rounds) == int(np.asarray(ref.quadbox_jobs).max())
+
+
+def test_empty_frontier_early_exit():
+    """Rays that miss the scene entirely drain after the root round; the
+    loop must stop there instead of running out the fixed bound."""
+    tri, bvh, depth, _ = _scene_and_rays(29, 230, 8)
+    org = np.tile(np.asarray([[50.0, 50.0, 50.0]], np.float32), (8, 1))
+    dirs = np.tile(np.asarray([[1.0, 0.0, 0.0]], np.float32), (8, 1))
+    rays = make_ray(jnp.asarray(org), jnp.asarray(dirs))
+    rec = trace_wavefront(bvh, rays, depth)
+    assert not np.asarray(rec.hit).any()
+    assert int(rec.rounds) == 1  # root popped once, frontier empty
+    np.testing.assert_array_equal(np.asarray(rec.quadbox_jobs),
+                                  np.ones(8, np.int32))
