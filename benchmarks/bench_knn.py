@@ -1,8 +1,10 @@
 """Generalized-mode benchmarks: kNN / similarity throughput.
 
+Queries flow through the session ``QueryEngine`` over a ``VectorIndex``
+built once (precomputed ||c||^2 norms, jit-cached compiled functions).
 Compares the paper's beat-form (16 lanes/beat + accumulator) against the
-TPU-native MXU form (DESIGN.md §2) and the Pallas kernel path: the ratio is
-the speedup "reusing the MXU" buys over lane-serial processing.
+TPU-native MXU backend (DESIGN.md §2) and the Pallas kernel backend: the
+ratio is the speedup "reusing the MXU" buys over lane-serial processing.
 """
 from __future__ import annotations
 
@@ -12,9 +14,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import euclidean_distance_sq, euclidean_scores
-from repro.core.knn import angular_scores, knn
-from repro.kernels.ops import euclidean_kernel
+from repro.api import VectorIndex
+from repro.core import euclidean_distance_sq
 
 
 def _t(f, *a, iters=5):
@@ -32,29 +33,31 @@ def run(rows):
     q = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
     c = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
 
-    mxu = jax.jit(euclidean_scores)
-    dt_mxu = _t(mxu, q, c)
+    index = VectorIndex.from_database(c)
+    engine = index.engine()
+
+    dt_mxu = _t(lambda qq: engine.scores(qq, "euclidean", backend="mxu"), q)
     rows.append(("euclid_mxu_form_512x4096x256", dt_mxu * 1e6,
                  f"pair_dists_per_s={m * n / dt_mxu:.3e}"))
 
     # beat form: one query row against the database per call (lane-serial)
-    beat = jax.jit(lambda qi, c: euclidean_distance_sq(
-        jnp.broadcast_to(qi, c.shape), c))
+    beat = jax.jit(lambda qi, cc: euclidean_distance_sq(
+        jnp.broadcast_to(qi, cc.shape), cc))
     dt_beat = _t(beat, q[0], c)
     rows.append(("euclid_beat_form_1x4096x256", dt_beat * 1e6,
                  f"mxu_speedup_vs_beats={dt_beat * m / dt_mxu:.1f}x"))
 
-    kern = jax.jit(lambda q, c: euclidean_kernel(q, c))
-    dt_k = _t(kern, q, c)
+    dt_k = _t(lambda qq: engine.scores(qq, "euclidean", backend="pallas"), q)
     rows.append(("euclid_pallas_kernel_512x4096x256", dt_k * 1e6,
                  f"interpret_overhead_vs_mxu={dt_k / dt_mxu:.1f}x"))
 
-    ang = jax.jit(angular_scores)
-    dt_a = _t(ang, q, c)
+    dt_a = _t(lambda qq: engine.scores(qq, "angular", backend="mxu"), q)
     rows.append(("angular_mxu_form_512x4096x256", dt_a * 1e6,
                  f"pair_scores_per_s={m * n / dt_a:.3e}"))
 
-    top = jax.jit(lambda q, c: knn(q, c, 8, "euclidean"))
-    dt_knn = _t(top, q, c)
+    dt_knn = _t(lambda qq: engine.nearest(qq, 8, "euclidean"), q)
+    info = engine.cache_info()
     rows.append(("knn_top8_euclidean", dt_knn * 1e6,
-                 f"queries_per_s={m / dt_knn:.3e}"))
+                 f"queries_per_s={m / dt_knn:.3e};"
+                 f"jit_cache_entries={info.entries};"
+                 f"jit_cache_hits={info.hits}"))

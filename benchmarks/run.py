@@ -1,20 +1,65 @@
-"""Benchmark runner: ``python -m benchmarks.run [--quick]``.
+"""Benchmark runner: ``python -m benchmarks.run [--quick] [--json PATH]``.
 
 Prints ``name,us_per_call,derived`` CSV rows — one section per paper
 table/figure (datapath throughput = Table V, FU census = Table VIII,
 randomized soak = §I, traversal = the RayCore workload, kNN = the
 generalized modes, model smoke = framework sanity).  The roofline analysis
 (production mesh) is separate: ``python -m benchmarks.roofline --all``.
+
+``--json PATH`` additionally writes the rows as machine-readable JSON
+(``name``, ``us_per_call``, parsed ``derived`` metrics) so the perf
+trajectory can be tracked across PRs — CI uploads ``BENCH_quick.json`` as
+an artifact on every run.
 """
 from __future__ import annotations
 
 import argparse
+import json
+
+
+def _split_top_level(s: str, sep: str = ";") -> list:
+    """Split on ``sep`` only outside (), {}, [] — metric names/values may
+    contain separators (e.g. ``ops_vs_tableVIII(add;mul;cmp)={...}``)."""
+    parts, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "({[":
+            depth += 1
+        elif ch in ")}]":
+            depth -= 1
+        if ch == sep and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    parts.append("".join(cur))
+    return parts
+
+
+def parse_derived(derived: str) -> dict:
+    """``k=v;k=v`` derived strings -> a metrics dict (floats where they
+    parse, strings otherwise; bare fragments collect under ``notes``)."""
+    out: dict = {}
+    for part in _split_top_level(derived):
+        part = part.strip()
+        if not part:
+            continue
+        if "=" not in part:
+            out.setdefault("notes", []).append(part)
+            continue
+        key, val = part.split("=", 1)
+        try:
+            out[key] = float(val[:-1] if val.endswith("x") else val)
+        except ValueError:
+            out[key] = val
+    return out
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="skip the slower model-stack section")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the rows as machine-readable JSON")
     args = ap.parse_args()
 
     from . import bench_datapath, bench_knn, bench_traversal
@@ -30,6 +75,15 @@ def main():
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.3f},{derived}")
+
+    if args.json:
+        payload = [{"name": name, "us_per_call": round(us, 3),
+                    "derived": parse_derived(derived)}
+                   for name, us, derived in rows]
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"wrote {len(payload)} rows to {args.json}")
 
 
 if __name__ == "__main__":

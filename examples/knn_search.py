@@ -1,6 +1,7 @@
-"""Vector search with the generalized datapath modes: build a database of
-embeddings, run exact kNN under all three metrics, cross-check the Pallas
-kernel path, and show the MoE-router connection.
+"""Vector search with the session query API: build a ``VectorIndex`` of
+embeddings once, run exact kNN under all three metrics through one
+``QueryEngine``, cross-check the Pallas kernel backend, and show the
+MoE-router connection.
 
 Run:  PYTHONPATH=src python examples/knn_search.py
 """
@@ -10,8 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.knn import knn
-from repro.kernels.ops import angular_kernel, euclidean_kernel
+from repro.api import VectorIndex
 
 
 def main():
@@ -25,11 +25,16 @@ def main():
                + 0.5 * rng.normal(size=(n_q, dim)).astype(np.float32))
     dbj, qj = jnp.asarray(db), jnp.asarray(queries)
 
+    # built once: the index owns the database and its ||c||^2 norms; the
+    # engine owns the per-(shape, backend, metric) compiled-function cache
+    index = VectorIndex.from_database(dbj)
+    engine = index.engine()
+
     for metric in ("euclidean", "angular", "cosine"):
+        engine.nearest(qj, 8, metric)  # warm the compiled cache
         t0 = time.perf_counter()
-        scores, idx = jax.jit(
-            lambda q, c: knn(q, c, 8, metric))(qj, dbj)
-        jax.block_until_ready(scores)
+        res = engine.nearest(qj, 8, metric)
+        jax.block_until_ready(res.scores)
         dt = time.perf_counter() - t0
         # recall@8 vs numpy exact
         if metric == "euclidean":
@@ -42,37 +47,39 @@ def main():
                          * np.linalg.norm(db, axis=1)[None])
             ref_idx = np.argsort(-sims, 1)[:, :8]
         recall = np.mean([len(set(a) & set(b)) / 8
-                          for a, b in zip(np.asarray(idx), ref_idx)])
+                          for a, b in zip(np.asarray(res.indices), ref_idx)])
         print(f"{metric:10s} top-8: recall@8={recall:.3f}  "
               f"({n_q} queries x {n_db} db in {dt * 1e3:.1f} ms)")
 
     # radius query (RTNN-style range-limited search: the vector-search twin
     # of the traversal engine's extent-limited shadow rays)
-    from repro.core.knn import radius_count, radius_search
     radius = 18.0  # ~ within-cluster distance at dim=128
+    engine.within(qj, radius, 8)  # warm both compiled functions
+    engine.count_within(qj, radius)
     t0 = time.perf_counter()
-    scores, idx, within = jax.jit(
-        lambda q, c: radius_search(q, c, radius, 8))(qj, dbj)
-    counts = jax.jit(lambda q, c: radius_count(q, c, radius))(qj, dbj)
+    res = engine.within(qj, radius, 8)
+    counts = engine.count_within(qj, radius)
     jax.block_until_ready(counts)
     dt = time.perf_counter() - t0
     # sanity: the returned neighbours really are the nearest in-range ones
-    d_near = np.asarray(scores)[np.asarray(within)]
+    d_near = np.asarray(res.scores)[np.asarray(res.within)]
     nearest = f"{d_near.min() ** 0.5:.1f}" if d_near.size else "n/a (none in range)"
     print(f"radius={radius}: avg {float(counts.mean()):.1f} db points in "
-          f"range per query, {float(within.mean()):.2f} of top-8 slots "
+          f"range per query, {float(res.within.mean()):.2f} of top-8 slots "
           f"filled, nearest in-range dist {nearest} "
-          f"(idx sample {np.asarray(idx)[0, :3].tolist()}) "
+          f"(idx sample {np.asarray(res.indices)[0, :3].tolist()}) "
           f"in {dt * 1e3:.1f} ms")
 
-    # kernel path cross-check
-    d_k = euclidean_kernel(qj, dbj)
-    dots_k, norms_k = angular_kernel(qj, dbj)
+    # pluggable backends: the same query through the Pallas kernel path
+    # (tiled multi-beat accumulator) instead of the jnp MXU form
+    d_k = engine.scores(qj, "euclidean", backend="pallas")
     ref = ((queries[:, None] - db[None]) ** 2).sum(-1)
-    print(f"pallas euclidean kernel max rel err: "
+    print(f"pallas euclidean backend max rel err: "
           f"{np.abs(np.asarray(d_k) - ref).max() / ref.max():.2e}")
+    print(f"compiled-function cache: {engine.cache_info()}")
 
     # the MoE-router connection: expert selection IS angular-mode top-k
+    # (router_scores builds a VectorIndex over the expert embeddings)
     from repro.models.moe import router_scores, router_topk
     from repro.models.config import MoEConfig
     m = MoEConfig(num_experts=16, top_k=2, d_ff_expert=1)

@@ -5,11 +5,10 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import VectorIndex
 from repro.core import (OP_ANGULAR, OP_EUCLIDEAN, OP_QUADBOX, OP_TRIANGLE,
                         Box, Triangle, make_ray, unified_stream)
 from repro.core.stream import make_jobs
-from repro.core import cosine_similarity
-from repro.core.knn import knn
 
 
 def main():
@@ -54,12 +53,15 @@ def main():
           f"(numpy: {((a - b) ** 2).sum():.4f})")
 
     print("== OpAngular -> cosine similarity (external sqrt+divide) ==")
+    # session API: the candidate set is indexed once (||c||^2 precomputed),
+    # then every query flows through one jit-cached engine
     q = rng.normal(size=(3, 24)).astype(np.float32)
     c = rng.normal(size=(5, 24)).astype(np.float32)
-    sims = cosine_similarity(jnp.asarray(q), jnp.asarray(c))
+    engine = VectorIndex.from_database(jnp.asarray(c)).engine()
+    sims = engine.similarity(jnp.asarray(q))
     print("  cosine matrix:\n", np.asarray(sims).round(3))
-    scores, idx = knn(jnp.asarray(q), jnp.asarray(c), k=2, metric="cosine")
-    print("  top-2 neighbours per query:", np.asarray(idx).tolist())
+    res = engine.nearest(jnp.asarray(q), k=2, metric="cosine")
+    print("  top-2 neighbours per query:", np.asarray(res.indices).tolist())
 
 
 if __name__ == "__main__":

@@ -1,9 +1,10 @@
-"""Render a triangle-mesh sphere over a ground plane with the BVH4 +
-unified datapath and write a PGM image.
+"""Render a triangle-mesh sphere over a ground plane with the session query
+API and write a PGM image.
 
-Primary rays are closest-hit wavefront queries; hard shadows come from
-extent-limited shadow rays (any-hit wavefront queries toward a point light,
-``repro.core.wavefront``) — the sphere casts a shadow onto the plane.
+The scene is prepared once (``Scene.from_triangles`` owns the BVH4 and its
+depth); every query goes through one ``QueryEngine``: primary rays are
+closest-hit traces, hard shadows are extent-limited ``"shadow"`` traces
+toward a point light — the sphere casts a shadow onto the plane.
 
 Run:  PYTHONPATH=src python examples/render.py [out.pgm]
 """
@@ -12,8 +13,7 @@ import sys
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (Triangle, build_bvh4, bvh4_depth, make_ray,
-                        occlusion_test, trace_wavefront)
+from repro.api import Scene, Triangle, make_ray
 
 
 def icosphere(subdiv=3):
@@ -61,9 +61,10 @@ def build_scene():
 def main():
     out_path = sys.argv[1] if len(sys.argv) > 1 else "/tmp/render.pgm"
     tris, tri = build_scene()
-    bvh = build_bvh4(tri)
-    depth = bvh4_depth(len(tris))
-    print(f"scene: {len(tris)} triangles (sphere + ground), BVH4 depth {depth}")
+    scene = Scene.from_triangles(tri)
+    engine = scene.engine()
+    print(f"scene: {scene.num_triangles} triangles (sphere + ground), "
+          f"BVH4 depth {scene.depth}")
 
     # pinhole camera above the sphere looking slightly down: sphere, ground
     # and the sphere's cast shadow are all in frame
@@ -78,7 +79,7 @@ def main():
             + ys.ravel()[:, None] * up[None]).astype(np.float32)
     org = np.tile(eye[None], (res * res, 1))
     rays = make_ray(jnp.asarray(org), jnp.asarray(dirs))
-    rec = trace_wavefront(bvh, rays, depth)
+    rec = engine.trace(rays)  # closest-hit, auto backend
 
     hit = np.asarray(rec.hit)
     t = np.asarray(rec.t)
@@ -99,7 +100,7 @@ def main():
     shadow_org = (pts + 1e-3 * n).astype(np.float32)
     shadow_rays = make_ray(jnp.asarray(shadow_org), jnp.asarray(ldir),
                            extent=jnp.asarray(dist.astype(np.float32)))
-    occluded = np.asarray(occlusion_test(bvh, shadow_rays, depth, t_min=1e-3))
+    occluded = np.asarray(engine.occluded(shadow_rays, t_min=1e-3))
 
     lambert = np.clip((n * ldir).sum(1), 0.0, 1.0)
     shade = 0.12 + 0.88 * lambert * np.where(hit & occluded, 0.15, 1.0)

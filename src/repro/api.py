@@ -1,0 +1,57 @@
+"""``repro.api`` — the one public query surface.
+
+Build a session once, query it everywhere (DESIGN.md §5):
+
+    from repro.api import Scene, VectorIndex, make_ray
+
+    scene = Scene.from_triangles(vertices)        # (N, 3, 3) or Triangle
+    engine = scene.engine()
+    hits = engine.trace(rays)                     # closest-hit
+    shadowed = engine.trace(rays, ray_type="shadow").hit
+
+    index = VectorIndex.from_database(embeddings)
+    engine = index.engine()
+    scores, idx = engine.nearest(queries, k=8, metric="cosine")
+    in_range = engine.within(queries, radius=5.0, k=16)
+
+Backends are pluggable (``backend="per_ray" | "wavefront" | "pallas" |
+"mxu" | "auto"``) and every backend returns the same result record; the
+legacy free functions in ``repro.core`` remain the semantic oracles.
+"""
+from .core.session import (  # noqa: F401
+    CacheInfo,
+    NearestResult,
+    QueryEngine,
+    Scene,
+    TraceResult,
+    VectorIndex,
+    WithinResult,
+    default_pad_multiple,
+    distance_backends,
+    register_distance_backend,
+    register_trace_backend,
+    trace_backends,
+)
+from .core.types import Box, Ray, Triangle, make_ray  # noqa: F401
+from .core.wavefront import RAY_TYPES, SHADOW_T_MIN  # noqa: F401
+
+__all__ = [
+    "Box",
+    "CacheInfo",
+    "NearestResult",
+    "QueryEngine",
+    "RAY_TYPES",
+    "Ray",
+    "SHADOW_T_MIN",
+    "Scene",
+    "TraceResult",
+    "Triangle",
+    "VectorIndex",
+    "WithinResult",
+    "default_pad_multiple",
+    "distance_backends",
+    "make_ray",
+    "register_distance_backend",
+    "register_trace_backend",
+    "trace_backends",
+]

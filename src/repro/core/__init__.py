@@ -43,8 +43,27 @@ from .wavefront import (  # noqa: F401
 from .knn import (  # noqa: F401
     angular_scores,
     cosine_similarity,
+    count_within_scores,
     euclidean_scores,
     knn,
+    pairwise_scores,
     radius_count,
     radius_search,
+    select_topk,
+    select_within,
+    squared_norms,
+)
+from .session import (  # noqa: F401
+    CacheInfo,
+    NearestResult,
+    QueryEngine,
+    Scene,
+    TraceResult,
+    VectorIndex,
+    WithinResult,
+    default_pad_multiple,
+    distance_backends,
+    register_distance_backend,
+    register_trace_backend,
+    trace_backends,
 )

@@ -12,6 +12,15 @@ Both forms are exposed here, plus a beat-exact path through
 (``repro.kernels.distance``) for the tiled/accumulated version that mirrors
 the hardware's multi-beat accumulator.
 
+Structure (DESIGN.md §5): every query is *score computation* followed by
+*selection*.  ``pairwise_scores`` produces the (M, N) score matrix for any
+metric; ``select_topk`` / ``select_within`` / ``count_within_scores`` are
+the selection epilogues.  The free functions below (``knn``,
+``radius_search``, ...) compose the two and stay the oracle API; the
+session layer (``repro.core.session``) reuses the same pieces with
+precomputed candidate norms (``c_sq_norms``) so ``||c||^2`` is paid once
+per index instead of once per query batch.
+
 This module is what the MoE routers call: router logits are OpAngular jobs
 (query = token activation, candidates = expert embeddings).
 """
@@ -20,38 +29,134 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+METRICS = ("euclidean", "angular", "cosine")
+RADIUS_METRICS = ("euclidean", "cosine")
+
+
+def squared_norms(x: jax.Array) -> jax.Array:
+    """Row-wise ||x||^2 — the OpAngular norm output.  (N, D) -> (N,)."""
+    x = x.astype(jnp.float32)
+    return jnp.sum(x * x, axis=-1)
+
 
 def euclidean_scores(queries: jax.Array, database: jax.Array,
-                     precision=jax.lax.Precision.HIGHEST) -> jax.Array:
-    """Pairwise squared Euclidean distances, MXU form.  (M,D),(N,D) -> (M,N)."""
+                     precision=jax.lax.Precision.HIGHEST, *,
+                     c_sq_norms: jax.Array | None = None) -> jax.Array:
+    """Pairwise squared Euclidean distances, MXU form.  (M,D),(N,D) -> (M,N).
+
+    ``c_sq_norms`` optionally supplies precomputed ``||c||^2`` (a
+    ``VectorIndex`` owns them); omitted, they are derived inline.
+    """
     q = queries.astype(jnp.float32)
     c = database.astype(jnp.float32)
     q2 = jnp.sum(q * q, axis=-1, keepdims=True)  # (M, 1)
-    c2 = jnp.sum(c * c, axis=-1)  # (N,)
+    c2 = squared_norms(c) if c_sq_norms is None else c_sq_norms  # (N,)
     qc = jnp.dot(q, c.T, precision=precision)  # (M, N) on the MXU
     return jnp.maximum(q2 - 2.0 * qc + c2[None, :], 0.0)
 
 
 def angular_scores(queries: jax.Array, database: jax.Array,
-                   precision=jax.lax.Precision.HIGHEST):
+                   precision=jax.lax.Precision.HIGHEST, *,
+                   c_sq_norms: jax.Array | None = None):
     """OpAngular outputs for all pairs: (Q.C^T, ||c||^2).  (M,D),(N,D)."""
     q = queries.astype(jnp.float32)
     c = database.astype(jnp.float32)
     dots = jnp.dot(q, c.T, precision=precision)  # (M, N)
-    norms = jnp.sum(c * c, axis=-1)  # (N,)
+    norms = squared_norms(c) if c_sq_norms is None else c_sq_norms  # (N,)
     return dots, norms
 
 
-def cosine_similarity(queries: jax.Array, database: jax.Array) -> jax.Array:
-    """The external-divider epilogue of Eq. (8): dot / (||q|| ||c||)."""
-    dots, c_norms = angular_scores(queries, database)
+def cosine_epilogue(dots: jax.Array, c_sq_norms: jax.Array,
+                    queries: jax.Array) -> jax.Array:
+    """The external-divider epilogue of Eq. (8): dot / (||q|| ||c||).
+    One definition of the normalization (incl. the 1e-30 clamp) shared by
+    every backend that produces (dots, ||c||^2) pairs."""
     q_norms = jnp.sqrt(jnp.sum(queries.astype(jnp.float32) ** 2, axis=-1))
-    denom = jnp.maximum(q_norms[:, None] * jnp.sqrt(c_norms)[None, :], 1e-30)
+    denom = jnp.maximum(
+        q_norms[:, None] * jnp.sqrt(c_sq_norms)[None, :], 1e-30)
     return dots / denom
 
 
+def cosine_similarity(queries: jax.Array, database: jax.Array, *,
+                      c_sq_norms: jax.Array | None = None,
+                      precision=jax.lax.Precision.HIGHEST) -> jax.Array:
+    """Full cosine-similarity matrix: OpAngular outputs + external divider."""
+    dots, c_norms = angular_scores(queries, database, precision,
+                                   c_sq_norms=c_sq_norms)
+    return cosine_epilogue(dots, c_norms, queries)
+
+
+def pairwise_scores(queries: jax.Array, database: jax.Array,
+                    metric: str = "euclidean", *,
+                    c_sq_norms: jax.Array | None = None,
+                    precision=jax.lax.Precision.HIGHEST) -> jax.Array:
+    """The (M, N) score matrix for any metric: squared distances for
+    ``euclidean`` (lower = closer), similarities for ``angular``/``cosine``
+    (higher = closer)."""
+    if metric == "euclidean":
+        return euclidean_scores(queries, database, precision,
+                                c_sq_norms=c_sq_norms)
+    if metric == "angular":
+        return angular_scores(queries, database, precision,
+                              c_sq_norms=c_sq_norms)[0]
+    if metric == "cosine":
+        return cosine_similarity(queries, database, c_sq_norms=c_sq_norms,
+                                 precision=precision)
+    raise ValueError(f"unknown metric: {metric} (want one of {METRICS})")
+
+
+# ---------------------------------------------------------------------------
+# Selection epilogues (shared by the free functions and the session API)
+# ---------------------------------------------------------------------------
+
+
+def select_topk(scores: jax.Array, k: int, metric: str = "euclidean"):
+    """Top-k selection on a score matrix: ascending for euclidean distances,
+    descending for angular/cosine similarities.  Returns (scores, indices)."""
+    if metric == "euclidean":
+        neg, idx = jax.lax.top_k(-scores, k)
+        return -neg, idx
+    return jax.lax.top_k(scores, k)
+
+
+def select_within(scores: jax.Array, radius: float, k: int,
+                  metric: str = "euclidean"):
+    """Range-limited top-k: the best k candidates inside the radius.
+    Returns (scores, indices, within) — ``within`` marks which of the k
+    slots actually fall inside the radius."""
+    if metric == "euclidean":
+        inside = scores <= radius * radius
+        neg, idx = jax.lax.top_k(jnp.where(inside, -scores, -jnp.inf), k)
+        return -neg, idx, jnp.isfinite(neg)
+    if metric == "cosine":
+        inside = scores >= radius
+        top, idx = jax.lax.top_k(jnp.where(inside, scores, -jnp.inf), k)
+        return top, idx, jnp.isfinite(top)
+    raise ValueError(
+        f"unknown radius metric: {metric} (want one of {RADIUS_METRICS})")
+
+
+def count_within_scores(scores: jax.Array, radius: float,
+                        metric: str = "euclidean") -> jax.Array:
+    """Number of candidates inside the radius, per query row.  (M,N)->(M,)."""
+    if metric == "euclidean":
+        inside = scores <= radius * radius
+    elif metric == "cosine":
+        inside = scores >= radius
+    else:
+        raise ValueError(
+            f"unknown radius metric: {metric} (want one of {RADIUS_METRICS})")
+    return jnp.sum(inside, axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Free-function oracle API (score + select composed per call)
+# ---------------------------------------------------------------------------
+
+
 def radius_search(queries: jax.Array, database: jax.Array, radius: float,
-                  k: int, metric: str = "euclidean"):
+                  k: int, metric: str = "euclidean", *,
+                  c_sq_norms: jax.Array | None = None):
     """Fixed-radius neighbor query: up to ``k`` neighbors within ``radius``.
 
     This is the vector-search twin of the traversal engine's extent-limited
@@ -66,47 +171,32 @@ def radius_search(queries: jax.Array, database: jax.Array, radius: float,
     (ascending) and similarities for cosine (descending, ``radius`` is the
     minimum similarity).
     """
-    if metric == "euclidean":
-        d = euclidean_scores(queries, database)
-        inside = d <= radius * radius
-        neg, idx = jax.lax.top_k(jnp.where(inside, -d, -jnp.inf), k)
-        return -neg, idx, jnp.isfinite(neg)
-    if metric == "cosine":
-        sims = cosine_similarity(queries, database)
-        inside = sims >= radius
-        top, idx = jax.lax.top_k(jnp.where(inside, sims, -jnp.inf), k)
-        return top, idx, jnp.isfinite(top)
-    raise ValueError(f"unknown radius_search metric: {metric}")
+    if metric not in RADIUS_METRICS:
+        raise ValueError(f"unknown radius_search metric: {metric}")
+    scores = pairwise_scores(queries, database, metric, c_sq_norms=c_sq_norms)
+    return select_within(scores, radius, k, metric)
 
 
 def radius_count(queries: jax.Array, database: jax.Array, radius: float,
-                 metric: str = "euclidean") -> jax.Array:
+                 metric: str = "euclidean", *,
+                 c_sq_norms: jax.Array | None = None) -> jax.Array:
     """Number of database points within ``radius`` of each query (the
     occlusion-test analogue: "does anything fall inside the extent" plus
     multiplicity).  (M, D), (N, D) -> (M,) i32."""
-    if metric == "euclidean":
-        inside = euclidean_scores(queries, database) <= radius * radius
-    elif metric == "cosine":
-        inside = cosine_similarity(queries, database) >= radius
-    else:
+    if metric not in RADIUS_METRICS:
         raise ValueError(f"unknown radius_count metric: {metric}")
-    return jnp.sum(inside, axis=-1).astype(jnp.int32)
+    scores = pairwise_scores(queries, database, metric, c_sq_norms=c_sq_norms)
+    return count_within_scores(scores, radius, metric)
 
 
-def knn(queries: jax.Array, database: jax.Array, k: int, metric: str = "euclidean"):
+def knn(queries: jax.Array, database: jax.Array, k: int,
+        metric: str = "euclidean", *, c_sq_norms: jax.Array | None = None):
     """Exact k-nearest-neighbour search on the datapath's distance modes.
 
     Returns (scores, indices) with scores ascending for euclidean and
     descending (most similar first) for angular/cosine.
     """
-    if metric == "euclidean":
-        d = euclidean_scores(queries, database)
-        neg, idx = jax.lax.top_k(-d, k)
-        return -neg, idx
-    if metric == "angular":
-        dots, _ = angular_scores(queries, database)
-        return jax.lax.top_k(dots, k)
-    if metric == "cosine":
-        sims = cosine_similarity(queries, database)
-        return jax.lax.top_k(sims, k)
-    raise ValueError(f"unknown metric: {metric}")
+    if metric not in METRICS:
+        raise ValueError(f"unknown metric: {metric}")
+    scores = pairwise_scores(queries, database, metric, c_sq_norms=c_sq_norms)
+    return select_topk(scores, k, metric)

@@ -1,0 +1,569 @@
+"""Session-style query API: one surface over every query engine.
+
+The paper's core design concept is the "defined-once-instantiated-
+everywhere" shared datapath: all four opcodes flow through one job/result
+schema on shared functional units.  This module applies the same idea one
+layer up, at the *query API* (DESIGN.md §5).  Instead of every call site
+threading ``(bvh, depth)`` by hand, recomputing ``||c||^2`` per query
+batch, and hand-rolling its own ``jax.jit`` wrapper, a session is built
+once and queried many times — the RTNN/CrossRT model of declaring queries
+against a prepared acceleration structure:
+
+* :class:`Scene` — built once from a triangle soup; owns the ``BVH4``, its
+  static ``depth``, and device placement.
+* :class:`VectorIndex` — built once from a database matrix; owns the
+  precomputed ``||c||^2`` norms reused by every distance query.
+* :class:`QueryEngine` — the single typed entry point
+  (``trace`` / ``nearest`` / ``within`` / ``count_within`` / ``scores``),
+  with a pluggable backend registry (``"per_ray"`` oracle, ``"wavefront"``,
+  ``"pallas"`` distance kernels, ``"auto"``), per-(shape, backend, query)
+  compiled-function caching modeled on ``serving/engine.py``, and
+  automatic pad-to-lane-multiple batching with result unpadding — the
+  padding policy defined once instead of ad hoc in every example.
+
+Every backend returns the same result record (:class:`TraceResult`,
+:class:`NearestResult`, :class:`WithinResult`), and results are
+*bit-identical* to the legacy free functions (``trace_rays``,
+``trace_wavefront``, ``knn``, ``radius_search``) — enforced by
+``tests/test_session.py`` — so the free functions remain the oracles and
+the engine remains swappable.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .bvh import BVH4, build_bvh4, bvh4_depth
+from .knn import (
+    METRICS,
+    RADIUS_METRICS,
+    angular_scores,
+    cosine_epilogue,
+    cosine_similarity,
+    count_within_scores,
+    knn,
+    pairwise_scores,
+    radius_count,
+    radius_search,
+    select_topk,
+    select_within,
+    squared_norms,
+)
+from .traversal import trace_rays
+from .types import Triangle
+from .wavefront import RAY_TYPES, SHADOW_T_MIN, trace_wavefront
+
+__all__ = [
+    "CacheInfo",
+    "NearestResult",
+    "QueryEngine",
+    "Scene",
+    "TraceResult",
+    "VectorIndex",
+    "WithinResult",
+    "default_pad_multiple",
+    "distance_backends",
+    "register_distance_backend",
+    "register_trace_backend",
+    "trace_backends",
+]
+
+
+# ---------------------------------------------------------------------------
+# Shared result records (one schema per query kind, whatever the backend)
+# ---------------------------------------------------------------------------
+
+
+class TraceResult(NamedTuple):
+    """Unified traversal result: identical fields for every trace backend."""
+
+    t: jax.Array  # (R,) f32  hit distance (inf = miss)
+    tri_index: jax.Array  # (R,) i32  index into the soup, -1 = miss
+    hit: jax.Array  # (R,) bool
+    quadbox_jobs: jax.Array  # (R,) i32  per-ray OpQuadbox jobs issued
+    triangle_jobs: jax.Array  # (R,) i32  per-ray OpTriangle jobs issued
+    rounds: jax.Array  # ()   i32  batch-level rounds (= max per-ray jobs)
+
+
+class NearestResult(NamedTuple):
+    """k-nearest result: scores ascending (euclidean) / descending (angular,
+    cosine), indices into the database."""
+
+    scores: jax.Array  # (M, k) f32
+    indices: jax.Array  # (M, k) i32
+
+
+class WithinResult(NamedTuple):
+    """Fixed-radius result: top-k by proximity with an in-radius mask."""
+
+    scores: jax.Array  # (M, k) f32
+    indices: jax.Array  # (M, k) i32
+    within: jax.Array  # (M, k) bool  which of the k slots are in range
+
+
+class CacheInfo(NamedTuple):
+    hits: int
+    misses: int
+    entries: int
+
+
+# ---------------------------------------------------------------------------
+# Padding policy (defined once; every query flows through it)
+# ---------------------------------------------------------------------------
+
+
+def default_pad_multiple() -> int:
+    """Lane multiple for batch padding: TPU vector lanes, else a small
+    sublane multiple so CPU tests exercise the same path cheaply."""
+    return 128 if jax.default_backend() == "tpu" else 8
+
+
+def _ceil_to(n: int, multiple: int) -> int:
+    return max(1, -(-n // multiple) * multiple)
+
+
+def _pad_leading(tree, n_to: int):
+    """Pad every leading-axis leaf to ``n_to`` rows by repeating row 0
+    (always a valid element, so padded lanes trace/score harmlessly).
+    Empty batches pad with zeros — rows are independent in every backend,
+    so a degenerate lane is harmless and sliced away on unpad."""
+    def pad(x):
+        n = x.shape[0]
+        if n == n_to:
+            return x
+        if n:
+            rep = jnp.broadcast_to(x[:1], (n_to - n,) + x.shape[1:])
+        else:
+            rep = jnp.zeros((n_to - n,) + x.shape[1:], x.dtype)
+        return jnp.concatenate([x, rep], axis=0)
+
+    return jax.tree_util.tree_map(pad, tree)
+
+
+def _unpad_leading(tree, n_padded: int, n: int):
+    """Slice per-element leaves back to the caller's batch size; scalar
+    leaves (e.g. ``rounds``) pass through untouched."""
+    if n_padded == n:
+        return tree
+    return jax.tree_util.tree_map(
+        lambda x: x[:n] if x.ndim >= 1 and x.shape[0] == n_padded else x, tree)
+
+
+def _shape_key(tree) -> tuple:
+    return tuple((tuple(x.shape), str(x.dtype))
+                 for x in jax.tree_util.tree_leaves(tree))
+
+
+# ---------------------------------------------------------------------------
+# Backend registries
+# ---------------------------------------------------------------------------
+
+# name -> (supported ray types, builder(scene, ray_type, t_min, max_rounds)
+#          returning fn(rays) -> TraceResult)
+_TRACE_BACKENDS: dict[str, tuple[tuple[str, ...], Callable]] = {}
+
+# name -> builder(index, metric, interpret) returning fn(queries) -> (M, N)
+# score matrix (squared distances for euclidean, similarities otherwise)
+_DISTANCE_BACKENDS: dict[str, Callable] = {}
+
+
+def register_trace_backend(name: str, ray_types=RAY_TYPES):
+    """Register a traversal backend under ``name``.  The builder receives
+    the static query config and returns a jit-able ``fn(rays)``."""
+    def deco(build):
+        _TRACE_BACKENDS[name] = (tuple(ray_types), build)
+        return build
+    return deco
+
+
+def register_distance_backend(name: str):
+    """Register a distance backend: ``build(index, metric, interpret)`` must
+    return a jit-able ``fn(queries) -> (M, N) scores``."""
+    def deco(build):
+        _DISTANCE_BACKENDS[name] = build
+        return build
+    return deco
+
+
+def trace_backends() -> tuple[str, ...]:
+    return tuple(_TRACE_BACKENDS)
+
+
+def distance_backends() -> tuple[str, ...]:
+    return tuple(_DISTANCE_BACKENDS)
+
+
+@register_trace_backend("per_ray", ray_types=("closest",))
+def _build_per_ray(scene: "Scene", ray_type: str, t_min: float,
+                   max_rounds):
+    """The vmapped per-ray ``while_loop`` oracle (closest-hit only)."""
+    if t_min:
+        raise ValueError("per_ray backend has no t_min support; "
+                         "use backend='wavefront'")
+    if max_rounds is not None:
+        raise ValueError("per_ray backend has no max_rounds support; "
+                         "use backend='wavefront'")
+
+    def run(rays):
+        rec = trace_rays(scene.bvh, rays, scene.depth)
+        # a ray is active for exactly quadbox_jobs consecutive rounds, so
+        # the batch-level round count is the max per-ray job count
+        return TraceResult(rec.t, rec.tri_index, rec.hit, rec.quadbox_jobs,
+                           rec.triangle_jobs, jnp.max(rec.quadbox_jobs))
+
+    return run
+
+
+@register_trace_backend("wavefront", ray_types=RAY_TYPES)
+def _build_wavefront(scene: "Scene", ray_type: str, t_min: float,
+                     max_rounds):
+    """Batch-level frontier loop: closest / any / shadow rays."""
+    def run(rays):
+        rec = trace_wavefront(scene.bvh, rays, scene.depth,
+                              ray_type=ray_type, t_min=t_min,
+                              max_rounds=max_rounds)
+        return TraceResult(*rec)  # field-for-field identical record
+
+    return run
+
+
+@register_distance_backend("mxu")
+def _build_mxu_scores(index: "VectorIndex", metric: str, interpret):
+    """MXU matmul form with the index's precomputed ||c||^2 (DESIGN.md §2)."""
+    db, c2 = index.database, index.sq_norms
+    return lambda q: pairwise_scores(q, db, metric, c_sq_norms=c2)
+
+
+@register_distance_backend("pallas")
+def _build_pallas_scores(index: "VectorIndex", metric: str, interpret):
+    """Tiled Pallas kernels (``repro.kernels.distance``): the multi-beat
+    accumulator path.  ``interpret=None`` auto-selects interpret mode
+    off-TPU."""
+    # deferred import: repro.kernels imports repro.core submodules, so a
+    # top-level import here would be circular during package init
+    from ..kernels import ops as kops
+
+    db = index.database
+    if metric == "euclidean":
+        return lambda q: kops.euclidean_kernel(q, db, interpret=interpret)
+    if metric == "angular":
+        # only dots are consumed; the kernel's norms output is DCE'd
+        return lambda q: kops.angular_kernel(q, db, interpret=interpret)[0]
+    if metric == "cosine":
+        c2 = index.sq_norms  # precomputed once, not re-reduced in-kernel
+
+        def cosine(q):
+            dots = kops.angular_kernel(q, db, interpret=interpret)[0]
+            return cosine_epilogue(dots, c2, q)
+        return cosine
+    raise ValueError(f"unknown metric: {metric} (want one of {METRICS})")
+
+
+# ---------------------------------------------------------------------------
+# Scene / VectorIndex: built once, queried everywhere
+# ---------------------------------------------------------------------------
+
+
+class Scene:
+    """A prepared triangle scene: ``BVH4`` + its static traversal depth.
+
+    Callers stop threading ``(bvh, depth)`` manually — the pair travels
+    together, optionally placed on a device at build time.
+    """
+
+    def __init__(self, bvh: BVH4, depth: int, device=None):
+        if device is not None:
+            bvh = jax.device_put(bvh, device)
+        self.bvh = bvh
+        self.depth = int(depth)
+
+    @classmethod
+    def from_triangles(cls, triangles, depth: int | None = None,
+                       device=None) -> "Scene":
+        """Build from a :class:`Triangle` soup or an ``(N, 3, 3)`` array of
+        per-triangle vertices."""
+        if not isinstance(triangles, Triangle):
+            arr = jnp.asarray(triangles, jnp.float32)
+            if arr.ndim != 3 or arr.shape[1:] != (3, 3):
+                raise ValueError(
+                    f"expected Triangle or (N, 3, 3) vertices, got {arr.shape}")
+            triangles = Triangle(arr[:, 0], arr[:, 1], arr[:, 2])
+        n = triangles.a.shape[0]
+        if depth is None:
+            depth = bvh4_depth(n)
+        return cls(build_bvh4(triangles, depth), depth, device)
+
+    @property
+    def num_triangles(self) -> int:
+        return int(self.bvh.triangles.a.shape[0])
+
+    def engine(self, **kwargs) -> "QueryEngine":
+        return QueryEngine(scene=self, **kwargs)
+
+    def __repr__(self):
+        return (f"Scene(num_triangles={self.num_triangles}, "
+                f"depth={self.depth})")
+
+
+class VectorIndex:
+    """A prepared vector database: candidate matrix + precomputed ||c||^2.
+
+    The norms are the OpAngular second output; computing them at build time
+    means every subsequent ``knn`` / ``radius_search`` / ``radius_count`` /
+    ``cosine_similarity`` call reuses them instead of re-reducing the whole
+    database per query batch.
+    """
+
+    def __init__(self, database: jax.Array,
+                 sq_norms: jax.Array | None = None, device=None):
+        database = jnp.asarray(database)
+        if device is not None:
+            database = jax.device_put(database, device)
+        self.database = database
+        self.sq_norms = squared_norms(database) if sq_norms is None else sq_norms
+
+    @classmethod
+    def from_database(cls, database, device=None) -> "VectorIndex":
+        return cls(database, device=device)
+
+    @property
+    def size(self) -> int:
+        return int(self.database.shape[0])
+
+    @property
+    def dim(self) -> int:
+        return int(self.database.shape[-1])
+
+    # -- direct (unjitted, unpadded) query methods: the session engine wraps
+    #    these with caching + padding; the MoE router calls them in-trace --
+
+    def dots(self, queries: jax.Array) -> jax.Array:
+        """OpAngular dot products only (router logits).  (M,D) -> (M,N)."""
+        return angular_scores(queries, self.database,
+                              c_sq_norms=self.sq_norms)[0]
+
+    def cosine_similarity(self, queries: jax.Array) -> jax.Array:
+        return cosine_similarity(queries, self.database,
+                                 c_sq_norms=self.sq_norms)
+
+    def knn(self, queries: jax.Array, k: int, metric: str = "euclidean"):
+        return knn(queries, self.database, k, metric,
+                   c_sq_norms=self.sq_norms)
+
+    def radius_search(self, queries: jax.Array, radius: float, k: int,
+                      metric: str = "euclidean"):
+        return radius_search(queries, self.database, radius, k, metric,
+                             c_sq_norms=self.sq_norms)
+
+    def radius_count(self, queries: jax.Array, radius: float,
+                     metric: str = "euclidean"):
+        return radius_count(queries, self.database, radius, metric,
+                            c_sq_norms=self.sq_norms)
+
+    def engine(self, **kwargs) -> "QueryEngine":
+        return QueryEngine(index=self, **kwargs)
+
+    def __repr__(self):
+        return f"VectorIndex(size={self.size}, dim={self.dim})"
+
+
+# ---------------------------------------------------------------------------
+# QueryEngine: the single typed entry point
+# ---------------------------------------------------------------------------
+
+
+class QueryEngine:
+    """Jit-cached session over a :class:`Scene` and/or :class:`VectorIndex`.
+
+    Modeled on ``serving/engine.py``: compiled functions are cached per
+    (query kind, backend, static config, padded operand shapes), so
+    repeated same-shape queries re-enter the compiled program directly.
+    Batches are padded to ``pad_multiple`` (row-0 repetition for rays,
+    which is always a valid ray) and results are sliced back — per-ray /
+    per-query state is row-independent in every backend, so the pad →
+    query → unpad round trip is an identity (``tests/test_session.py``).
+
+    ``backend="auto"`` picks per query: wavefront for traced batches
+    (per-ray oracle for tiny closest-hit batches), Pallas kernels for
+    distance queries on TPU and the MXU jnp form elsewhere.
+    """
+
+    #: closest-hit batches up to this size go to the per-ray oracle under
+    #: "auto" (the batch loop only pays off once the frontier is wide)
+    AUTO_PER_RAY_MAX = 8
+
+    def __init__(self, scene: Scene | None = None,
+                 index: VectorIndex | None = None, *,
+                 backend: str = "auto", pad_multiple: int | None = None,
+                 interpret: bool | None = None):
+        self.scene = scene
+        self.index = index
+        self.default_backend = backend
+        self.pad_multiple = (default_pad_multiple() if pad_multiple is None
+                             else max(1, int(pad_multiple)))
+        self.interpret = interpret  # None = auto (off-TPU -> interpret)
+        self._cache: dict = {}
+        self._hits = 0
+        self._misses = 0
+
+    # -- cache ------------------------------------------------------------
+
+    def cache_info(self) -> CacheInfo:
+        return CacheInfo(self._hits, self._misses, len(self._cache))
+
+    def cache_clear(self) -> None:
+        self._cache.clear()
+        self._hits = self._misses = 0
+
+    def _compiled(self, key, build):
+        fn = self._cache.get(key)
+        if fn is None:
+            self._misses += 1
+            fn = jax.jit(build())
+            self._cache[key] = fn
+        else:
+            self._hits += 1
+        return fn
+
+    # -- backend resolution ----------------------------------------------
+
+    def resolve_trace_backend(self, ray_type: str, n_rays: int,
+                              t_min: float = 0.0,
+                              max_rounds: int | None = None) -> str:
+        """The backend "auto" picks for a trace: per-ray oracle for tiny
+        plain closest-hit batches, wavefront everywhere else (including
+        any query the oracle cannot express: t_min, max_rounds)."""
+        if (ray_type == "closest" and n_rays <= self.AUTO_PER_RAY_MAX
+                and not t_min and max_rounds is None):
+            return "per_ray"
+        return "wavefront"
+
+    def resolve_distance_backend(self) -> str:
+        """The backend "auto" picks for distance queries: compiled Pallas
+        kernels on TPU, the MXU jnp form elsewhere (interpret mode would
+        only add overhead)."""
+        return "pallas" if jax.default_backend() == "tpu" else "mxu"
+
+    # -- traversal queries -------------------------------------------------
+
+    def trace(self, rays, ray_type: str = "closest", *,
+              backend: str | None = None, t_min: float | None = None,
+              max_rounds: int | None = None) -> TraceResult:
+        """Traverse a ray batch.  ``ray_type`` is ``"closest"`` | ``"any"``
+        | ``"shadow"`` (CrossRT-style split); results are bit-identical to
+        the legacy ``trace_rays`` / ``trace_wavefront`` entry points."""
+        if self.scene is None:
+            raise ValueError("QueryEngine has no Scene; construct with "
+                             "QueryEngine(scene=...) or Scene.engine()")
+        if ray_type not in RAY_TYPES:
+            raise ValueError(
+                f"ray_type must be one of {RAY_TYPES}, got {ray_type!r}")
+        if t_min is None:
+            t_min = SHADOW_T_MIN if ray_type == "shadow" else 0.0
+        t_min = float(t_min)
+        n = rays.origin.shape[0]
+        name = backend or self.default_backend
+        if name == "auto":
+            name = self.resolve_trace_backend(ray_type, n, t_min, max_rounds)
+        if name not in _TRACE_BACKENDS:
+            raise ValueError(f"unknown trace backend {name!r} "
+                             f"(registered: {trace_backends()})")
+        supported, build = _TRACE_BACKENDS[name]
+        if ray_type not in supported:
+            raise ValueError(f"backend {name!r} supports ray types "
+                             f"{supported}, got {ray_type!r}")
+
+        padded = _pad_leading(rays, _ceil_to(n, self.pad_multiple))
+        n_padded = padded.origin.shape[0]
+        key = ("trace", name, ray_type, t_min, max_rounds,
+               _shape_key(padded))
+        fn = self._compiled(
+            key, lambda: build(self.scene, ray_type, t_min, max_rounds))
+        return _unpad_leading(fn(padded), n_padded, n)
+
+    def occluded(self, rays, *, t_min: float = SHADOW_T_MIN,
+                 backend: str | None = None) -> jax.Array:
+        """Boolean shadow/visibility query (extent-limited any-hit)."""
+        return self.trace(rays, ray_type="shadow", t_min=t_min,
+                          backend=backend).hit
+
+    # -- distance queries --------------------------------------------------
+
+    def _distance_fn(self, kind: str, queries, metric: str,
+                     backend: str | None, statics: tuple, epilogue):
+        if self.index is None:
+            raise ValueError("QueryEngine has no VectorIndex; construct "
+                             "with QueryEngine(index=...) or "
+                             "VectorIndex.engine()")
+        name = backend or self.default_backend
+        if name == "auto":
+            name = self.resolve_distance_backend()
+        if name not in _DISTANCE_BACKENDS:
+            raise ValueError(f"unknown distance backend {name!r} "
+                             f"(registered: {distance_backends()})")
+        q = jnp.asarray(queries)
+        n = q.shape[0]
+        padded = _pad_leading(q, _ceil_to(n, self.pad_multiple))
+        key = (kind, name, metric) + statics + _shape_key(padded)
+        build_scores = _DISTANCE_BACKENDS[name]
+
+        def build():
+            score_fn = build_scores(self.index, metric, self.interpret)
+            return lambda qq: epilogue(score_fn(qq))
+
+        fn = self._compiled(key, build)
+        return _unpad_leading(fn(padded), padded.shape[0], n)
+
+    def nearest(self, queries, k: int, metric: str = "euclidean", *,
+                backend: str | None = None) -> NearestResult:
+        """Exact k-nearest neighbours against the index."""
+        if metric not in METRICS:
+            raise ValueError(f"unknown metric: {metric}")
+        k = int(k)
+        return self._distance_fn(
+            "nearest", queries, metric, backend, (k,),
+            lambda s: NearestResult(*select_topk(s, k, metric)))
+
+    def within(self, queries, radius: float, k: int,
+               metric: str = "euclidean", *,
+               backend: str | None = None) -> WithinResult:
+        """Fixed-radius query: best ``k`` in-range neighbours (the
+        extent-limited shadow-ray twin, DESIGN.md §3)."""
+        if metric not in RADIUS_METRICS:
+            raise ValueError(f"unknown radius metric: {metric}")
+        radius, k = float(radius), int(k)
+        return self._distance_fn(
+            "within", queries, metric, backend, (radius, k),
+            lambda s: WithinResult(*select_within(s, radius, k, metric)))
+
+    def count_within(self, queries, radius: float,
+                     metric: str = "euclidean", *,
+                     backend: str | None = None) -> jax.Array:
+        """How many database points fall within ``radius`` per query."""
+        if metric not in RADIUS_METRICS:
+            raise ValueError(f"unknown radius metric: {metric}")
+        radius = float(radius)
+        return self._distance_fn(
+            "count_within", queries, metric, backend, (radius,),
+            lambda s: count_within_scores(s, radius, metric))
+
+    def scores(self, queries, metric: str = "euclidean", *,
+               backend: str | None = None) -> jax.Array:
+        """The raw (M, N) score matrix (squared distances / similarities) —
+        what MoE routers consume as logits."""
+        if metric not in METRICS:
+            raise ValueError(f"unknown metric: {metric}")
+        return self._distance_fn("scores", queries, metric, backend, (),
+                                 lambda s: s)
+
+    def similarity(self, queries, *, backend: str | None = None) -> jax.Array:
+        """Full cosine-similarity matrix (external-divider epilogue)."""
+        return self.scores(queries, "cosine", backend=backend)
+
+    def __repr__(self):
+        return (f"QueryEngine(scene={self.scene!r}, index={self.index!r}, "
+                f"backend={self.default_backend!r}, "
+                f"pad_multiple={self.pad_multiple}, "
+                f"cache={self.cache_info()})")

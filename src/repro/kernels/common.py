@@ -113,3 +113,12 @@ def select_dim(vx, vy, vz, k):
 
 def ceil_to(x: int, m: int) -> int:
     return -(-x // m) * m
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """The kernels' ``interpret=None`` default means *auto*: interpret mode
+    off-TPU (the only thing the CPU backend supports), compiled Mosaic on a
+    real TPU — so the same call site is correct on CPU CI and on device."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret

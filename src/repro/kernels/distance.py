@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .common import resolve_interpret
+
 # MXU-aligned default blocks.
 BM, BN, BK = 256, 256, 512
 
@@ -73,11 +75,13 @@ def _norm_kernel(c_ref, out_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("mode", "bm", "bn", "bk", "interpret"))
-def distance_pallas(q, c, *, mode="euclidean", bm=BM, bn=BN, bk=BK, interpret=True):
+def distance_pallas(q, c, *, mode="euclidean", bm=BM, bn=BN, bk=BK, interpret=None):
     """Pairwise distance/dot scores.  q: (M, D), c: (N, D), padded to blocks.
 
     Returns (M, N) f32: squared Euclidean distances or dot products.
+    ``interpret=None`` auto-selects: interpret off-TPU, compiled on TPU.
     """
+    interpret = resolve_interpret(interpret)
     m, d = q.shape
     n, d2 = c.shape
     assert d == d2 and m % bm == 0 and n % bn == 0 and d % bk == 0, (q.shape, c.shape)
@@ -99,8 +103,9 @@ def distance_pallas(q, c, *, mode="euclidean", bm=BM, bn=BN, bk=BK, interpret=Tr
 
 
 @functools.partial(jax.jit, static_argnames=("bn", "bk", "interpret"))
-def norms_pallas(c, *, bn=BN, bk=BK, interpret=True):
+def norms_pallas(c, *, bn=BN, bk=BK, interpret=None):
     """||c_n||^2 for every row: (N, D) -> (1, N)."""
+    interpret = resolve_interpret(interpret)
     n, d = c.shape
     assert n % bn == 0 and d % bk == 0, c.shape
     grid = (n // bn, d // bk)

@@ -5,8 +5,9 @@ pytrees (Ray/Box/Triangle/DatapathJob).  These wrappers pack/unpack and pad
 job counts to LANES multiples (padding jobs are benign: zero boxes, NaN-free)
 so every call site stays shape-agnostic.
 
-``interpret=True`` everywhere by default: this container is CPU-only; on a
-real TPU pass ``interpret=False`` and the same BlockSpecs lower to Mosaic.
+``interpret=None`` everywhere by default, meaning *auto*: interpret mode
+off-TPU (CPU CI), compiled Mosaic on a real TPU — the same call sites are
+correct on both.  Pass an explicit bool to override.
 """
 from __future__ import annotations
 
@@ -64,7 +65,7 @@ def _pad_cols(x: jax.Array, n_to: int, value=0.0) -> jax.Array:
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def ray_box_kernel(ray: Ray, boxes: Box, *, interpret=True) -> QuadBoxResult:
+def ray_box_kernel(ray: Ray, boxes: Box, *, interpret=None) -> QuadBoxResult:
     """Kernel-backed ray-vs-4-AABB test.  ray fields (N,·); boxes (N,4,3)."""
     n = ray.origin.shape[0]
     n_pad = ceil_to(max(n, 1), LANES)
@@ -84,7 +85,7 @@ def ray_box_kernel(ray: Ray, boxes: Box, *, interpret=True) -> QuadBoxResult:
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def ray_triangle_kernel(ray: Ray, tri: Triangle, *, interpret=True) -> TriangleResult:
+def ray_triangle_kernel(ray: Ray, tri: Triangle, *, interpret=None) -> TriangleResult:
     """Kernel-backed watertight ray-triangle test.  All batched (N, ·)."""
     n = ray.origin.shape[0]
     n_pad = ceil_to(max(n, 1), LANES)
@@ -111,7 +112,7 @@ def _pad2d(x, bm, bk):
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
-def euclidean_kernel(q, c, *, bm=128, bn=128, bk=128, interpret=True):
+def euclidean_kernel(q, c, *, bm=128, bn=128, bk=128, interpret=None):
     """Pairwise squared distances (M,D)x(N,D) -> (M,N), kernel-backed."""
     m, n = q.shape[0], c.shape[0]
     qp, cp = _pad2d(q, bm, bk), _pad2d(c, bn, bk)  # same D -> same padded K
@@ -121,7 +122,7 @@ def euclidean_kernel(q, c, *, bm=128, bn=128, bk=128, interpret=True):
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
-def angular_kernel(q, c, *, bm=128, bn=128, bk=128, interpret=True):
+def angular_kernel(q, c, *, bm=128, bn=128, bk=128, interpret=None):
     """OpAngular batched: ((M,N) dots, (N,) norms), kernel-backed."""
     m, n = q.shape[0], c.shape[0]
     qp, cp = _pad2d(q, bm, bk), _pad2d(c, bn, bk)  # same D -> same padded K
@@ -209,7 +210,7 @@ def unpack_unified(opcodes: jax.Array, out: jax.Array, t: int) -> DatapathOutput
     )
 
 
-def unified_datapath(jobs: DatapathJob, *, interpret=True) -> DatapathOutput:
+def unified_datapath(jobs: DatapathJob, *, interpret=None) -> DatapathOutput:
     """Mixed-opcode stream through the unified kernel.
 
     jobs: every leaf shaped (T, LANES, ...) — T beats of 128 lane-streams;

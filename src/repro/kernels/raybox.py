@@ -15,7 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import LANES, fmax_rows, fmin_rows, quadsort_rows
+from .common import (LANES, fmax_rows, fmin_rows, quadsort_rows,
+                     resolve_interpret)
 
 
 def raybox_kernel(org_ref, inv_ref, neg_ref, lo_ref, hi_ref,
@@ -55,11 +56,12 @@ def raybox_kernel(org_ref, inv_ref, neg_ref, lo_ref, hi_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def raybox_pallas(org, inv, neg, box_lo, box_hi, *, interpret=True):
+def raybox_pallas(org, inv, neg, box_lo, box_hi, *, interpret=None):
     """org/inv/neg: (3, N) f32; box_lo/hi: (12, N) f32.  N % LANES == 0.
 
     Returns (tmin (4,N) f32, idx (4,N) i32, hit (4,N) i32), tmin sorted.
     """
+    interpret = resolve_interpret(interpret)
     n = org.shape[1]
     assert n % LANES == 0, n
     grid = (n // LANES,)

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import LANES, round_stage, select_dim
+from .common import LANES, resolve_interpret, round_stage, select_dim
 
 
 def raytri_kernel(org_ref, shear_ref, k_ref, va_ref, vb_ref, vc_ref,
@@ -69,11 +69,12 @@ def raytri_kernel(org_ref, shear_ref, k_ref, va_ref, vb_ref, vc_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def raytri_pallas(org, shear, k, va, vb, vc, *, interpret=True):
+def raytri_pallas(org, shear, k, va, vb, vc, *, interpret=None):
     """All inputs (3, N) f32 (k holds kx/ky/kz as f32).  N % LANES == 0.
 
     Returns (t_num (1,N) f32, t_denom (1,N) f32, hit (1,N) i32).
     """
+    interpret = resolve_interpret(interpret)
     n = org.shape[1]
     assert n % LANES == 0, n
     grid = (n // LANES,)

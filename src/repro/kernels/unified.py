@@ -63,6 +63,7 @@ from .common import (
     fmax_rows,
     fmin_rows,
     quadsort_rows,
+    resolve_interpret,
     round_stage,
     select_dim,
 )
@@ -220,7 +221,7 @@ def unified_kernel(opcode_ref, operand_ref, out_ref, acc_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def unified_pallas(opcodes, operands, *, interpret=True):
+def unified_pallas(opcodes, operands, *, interpret=None):
     """Run a mixed-opcode job stream through the unified datapath kernel.
 
     opcodes:  (T,) i32 — one opcode per tile (beat) of 128 lane-streams.
@@ -228,7 +229,9 @@ def unified_pallas(opcodes, operands, *, interpret=True):
               column ``t * LANES + l`` is beat t of lane-stream l, packed in
               the union row layout of ``common.py``.
     Returns (N_OUTPUT_ROWS, T * LANES) f32 in the union output layout.
+    ``interpret=None`` auto-selects: interpret off-TPU, compiled on TPU.
     """
+    interpret = resolve_interpret(interpret)
     rows, n = operands.shape
     assert rows == N_OPERAND_ROWS and n % LANES == 0, operands.shape
     t_tiles = n // LANES

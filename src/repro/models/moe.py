@@ -3,9 +3,9 @@
 Paper integration (DESIGN.md §4): router scores between token activations
 and expert embeddings are exactly the paper's **OpAngular** jobs — dot
 products q·eᵢ, optionally normalized into full cosine similarity by the
-"external divider" epilogue.  The router literally calls
-``repro.core.knn.angular_scores`` / ``cosine_similarity``, the same code
-path validated against the datapath kernels.
+"external divider" epilogue.  The router literally queries a session-API
+``repro.core.session.VectorIndex`` over the expert embeddings, the same
+code path validated against the datapath kernels.
 
 Expert parallelism (EP): experts are sharded over the ``model`` mesh axis.
 Tokens stay replicated across that axis (they already are — attention
@@ -31,7 +31,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from ..core.knn import angular_scores, cosine_similarity
+from ..core.session import VectorIndex
 from ..parallel.compat import shard_map
 from .config import ModelConfig, MoEConfig
 from .layers import dense_init, split
@@ -57,13 +57,17 @@ def moe_init(rng, cfg: ModelConfig):
 
 
 def router_scores(m: MoEConfig, x_flat: jax.Array, router_w: jax.Array):
-    """Datapath OpAngular jobs: scores[n, e] = x_n · router_e (or cosine)."""
+    """Datapath OpAngular jobs: scores[n, e] = x_n · router_e (or cosine).
+
+    The expert table is a session-API :class:`VectorIndex` (the OpAngular
+    candidate points) built in-trace — its ``||e||^2`` norms are computed
+    once and shared by the cosine epilogue instead of re-reduced per call.
+    """
+    index = VectorIndex.from_database(router_w.astype(jnp.float32))
+    queries = x_flat.astype(jnp.float32)
     if m.router_metric == "cosine":
-        return cosine_similarity(x_flat.astype(jnp.float32),
-                                 router_w.astype(jnp.float32))
-    dots, _ = angular_scores(x_flat.astype(jnp.float32),
-                             router_w.astype(jnp.float32))
-    return dots
+        return index.cosine_similarity(queries)
+    return index.dots(queries)
 
 
 def router_topk(m: MoEConfig, scores: jax.Array):

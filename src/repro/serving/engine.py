@@ -36,7 +36,13 @@ class Engine:
                  extra_inputs: Optional[dict] = None):
         """tokens (B, T) i32 prompt.  Returns (B, max_new_tokens) i32."""
         b, t = tokens.shape
-        assert t + max_new_tokens <= self.max_len, "increase max_len"
+        if t + max_new_tokens > self.max_len:
+            # a user-facing precondition, not an internal invariant: asserts
+            # vanish under ``python -O``, so raise properly
+            raise ValueError(
+                f"prompt length {t} + max_new_tokens {max_new_tokens} "
+                f"exceeds max_len {self.max_len}; construct the Engine "
+                f"with a larger max_len")
         cache = init_cache(self.cfg, b, self.max_len)
         batch = {"tokens": tokens}
         if extra_inputs:

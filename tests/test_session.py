@@ -1,0 +1,360 @@
+"""Session query API: backend parity, padding round-trips, jit-cache hits.
+
+The contract (DESIGN.md §5): ``QueryEngine`` is a *session* over the same
+engines the free functions expose — every backend must return the shared
+result record with values bit-identical to its legacy entry point
+(``trace_rays`` / ``trace_wavefront`` / ``knn`` / ``radius_search``), the
+pad → query → unpad round trip must be an identity, and repeated
+same-shape queries must re-enter the compiled cache without retracing.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import jax._src.test_util as jtu
+
+from repro.api import (QueryEngine, Scene, VectorIndex, distance_backends,
+                       make_ray, trace_backends)
+from repro.core import (Triangle, cosine_similarity, knn, radius_count,
+                        radius_search, trace_rays, trace_wavefront)
+
+TRACE_FIELDS = ("t", "tri_index", "hit", "quadbox_jobs", "triangle_jobs")
+
+
+def _soup(rng, n_tri, scale=0.15):
+    ctr = rng.uniform(-1, 1, (n_tri, 3)).astype(np.float32)
+    d1 = rng.normal(scale=scale, size=(n_tri, 3)).astype(np.float32)
+    d2 = rng.normal(scale=scale, size=(n_tri, 3)).astype(np.float32)
+    return Triangle(a=jnp.asarray(ctr), b=jnp.asarray(ctr + d1),
+                    c=jnp.asarray(ctr + d2))
+
+
+def _rays(rng, n):
+    org = rng.uniform(-3, -2, (n, 3)).astype(np.float32)
+    tgt = rng.uniform(-0.5, 0.5, (n, 3)).astype(np.float32)
+    return make_ray(jnp.asarray(org), jnp.asarray(tgt - org))
+
+
+def _scene_and_rays(seed, n_tri, n_rays):
+    rng = np.random.default_rng(seed)
+    scene = Scene.from_triangles(_soup(rng, n_tri))
+    return scene, _rays(rng, n_rays)
+
+
+def _vectors(seed=0, n_q=17, n_db=211, dim=24):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(n_q, dim)).astype(np.float32))
+    db = jnp.asarray(rng.normal(size=(n_db, dim)).astype(np.float32))
+    return q, db
+
+
+SCENES = [(7, 230, 64), (17, 3, 32)]  # random soup + root-is-leaf-parent
+
+
+# ---------------------------------------------------------------------------
+# trace: every backend x ray type bit-matches its legacy entry point
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed,n_tri,n_rays", SCENES)
+@pytest.mark.parametrize("backend,ray_type", [
+    ("per_ray", "closest"),
+    ("wavefront", "closest"),
+    ("wavefront", "any"),
+    ("wavefront", "shadow"),
+])
+def test_trace_bitmatches_legacy(seed, n_tri, n_rays, backend, ray_type):
+    scene, rays = _scene_and_rays(seed, n_tri, n_rays)
+    engine = scene.engine(pad_multiple=16)  # 64 -> 64, 32 -> 32 (+ pad path)
+    got = engine.trace(rays, ray_type=ray_type, backend=backend)
+    if backend == "per_ray":
+        ref = trace_rays(scene.bvh, rays, scene.depth)
+    else:
+        ref = trace_wavefront(scene.bvh, rays, scene.depth,
+                              ray_type=ray_type)
+    for field in TRACE_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, field)),
+            np.asarray(getattr(ref, field)), err_msg=field)
+    if backend == "wavefront":
+        assert int(got.rounds) == int(ref.rounds)
+    else:
+        # per-ray oracle reports the equivalent batch-round count
+        assert int(got.rounds) == int(np.asarray(ref.quadbox_jobs).max())
+
+
+@pytest.mark.parametrize("ray_type", ["closest", "any", "shadow"])
+def test_trace_padded_roundtrip_identity(ray_type):
+    """pad -> query -> unpad is an identity: a padded batch returns exactly
+    the unpadded batch's results (rays are row-independent in every
+    backend)."""
+    scene, rays = _scene_and_rays(7, 230, 50)  # 50 pads to 64
+    tight = scene.engine(pad_multiple=1)
+    padded = scene.engine(pad_multiple=16)
+    a = tight.trace(rays, ray_type=ray_type)
+    b = padded.trace(rays, ray_type=ray_type)
+    assert b.t.shape == (50,)
+    for field in TRACE_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(a, field)),
+                                      np.asarray(getattr(b, field)),
+                                      err_msg=field)
+    assert int(a.rounds) == int(b.rounds)
+
+
+def test_trace_occluded_matches_occlusion_test():
+    from repro.core import occlusion_test
+    scene, rays = _scene_and_rays(23, 230, 64)
+    got = scene.engine(pad_multiple=8).occluded(rays, t_min=1e-3)
+    ref = occlusion_test(scene.bvh, rays, scene.depth, t_min=1e-3)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_trace_backend_validation():
+    scene, rays = _scene_and_rays(11, 100, 8)
+    engine = scene.engine()
+    with pytest.raises(ValueError, match="per_ray"):
+        engine.trace(rays, ray_type="any", backend="per_ray")
+    with pytest.raises(ValueError, match="unknown trace backend"):
+        engine.trace(rays, backend="warp")
+    with pytest.raises(ValueError, match="ray_type"):
+        engine.trace(rays, ray_type="refracted")
+    with pytest.raises(ValueError, match="no Scene"):
+        QueryEngine().trace(rays)
+    assert "per_ray" in trace_backends() and "wavefront" in trace_backends()
+
+
+def test_auto_backend_policy():
+    scene, rays = _scene_and_rays(11, 100, 8)
+    engine = scene.engine()
+    assert engine.resolve_trace_backend("closest", 4) == "per_ray"
+    assert engine.resolve_trace_backend("closest", 500) == "wavefront"
+    assert engine.resolve_trace_backend("shadow", 4) == "wavefront"
+    # queries the per-ray oracle cannot express route to wavefront, so a
+    # tiny closest-hit batch with an epsilon/round cap must still work
+    assert engine.resolve_trace_backend("closest", 4, t_min=1e-3) == "wavefront"
+    assert engine.resolve_trace_backend("closest", 4,
+                                        max_rounds=2) == "wavefront"
+    small = jax.tree_util.tree_map(lambda x: x[:4], rays)
+    rec = engine.trace(small, t_min=1e-3)  # auto: must not hit per_ray
+    assert rec.t.shape == (4,)
+    with pytest.raises(ValueError, match="max_rounds"):
+        engine.trace(small, backend="per_ray", max_rounds=2)
+    assert engine.resolve_distance_backend() == (
+        "pallas" if jax.default_backend() == "tpu" else "mxu")
+    # an engine-wide default backend overrides the auto policy...
+    forced = scene.engine(backend="wavefront")
+    forced.trace(small)
+    assert all(key[1] == "wavefront" for key in forced._cache)
+    # ...and a per-call backend="auto" re-enables it
+    forced.trace(small, backend="auto")
+    assert any(key[1] == "per_ray" for key in forced._cache)
+
+
+# ---------------------------------------------------------------------------
+# compiled-function cache: same shape re-enters without retracing
+# ---------------------------------------------------------------------------
+
+
+def test_same_shape_query_hits_compiled_cache():
+    scene, rays = _scene_and_rays(7, 230, 64)
+    engine = scene.engine(pad_multiple=8)
+    first = engine.trace(rays)
+    assert engine.cache_info().misses == 1
+    # second same-shape call: engine cache hit AND zero new jit traces
+    with jtu.count_jit_tracing_cache_miss() as count:
+        second = engine.trace(rays)
+    assert count[0] == 0, "same-shape query retraced its compiled function"
+    info = engine.cache_info()
+    assert info.hits == 1 and info.misses == 1 and info.entries == 1
+    np.testing.assert_array_equal(np.asarray(first.t), np.asarray(second.t))
+
+    # a different shape (not a pad-multiple neighbour) compiles a new entry
+    sub = jax.tree_util.tree_map(lambda x: x[:16], rays)
+    engine.trace(sub)
+    assert engine.cache_info().entries == 2
+    # ...but shapes inside the same pad bucket share one entry (the first
+    # call only traces the eager pad ops; the compiled query fn is reused)
+    sub9 = jax.tree_util.tree_map(lambda x: x[:9], rays)
+    engine.trace(sub9)  # pads to 16: same compiled fn as sub
+    assert engine.cache_info().entries == 2
+    with jtu.count_jit_tracing_cache_miss() as count:
+        engine.trace(sub9)
+    assert count[0] == 0
+
+
+def test_distance_cache_and_stats():
+    q, db = _vectors()
+    engine = VectorIndex.from_database(db).engine(pad_multiple=8)
+    engine.nearest(q, 5)
+    with jtu.count_jit_tracing_cache_miss() as count:
+        engine.nearest(q, 5)
+    assert count[0] == 0
+    assert engine.cache_info().hits == 1
+    engine.nearest(q, 7)  # different k -> different compiled fn
+    assert engine.cache_info().entries == 2
+    engine.cache_clear()
+    assert engine.cache_info() == (0, 0, 0)
+
+
+# ---------------------------------------------------------------------------
+# nearest / within / count_within / similarity vs the legacy free functions
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("metric", ["euclidean", "angular", "cosine"])
+def test_nearest_matches_knn(metric):
+    q, db = _vectors()
+    index = VectorIndex.from_database(db)
+    engine = index.engine(pad_multiple=8)
+    got = engine.nearest(q, 5, metric)
+    # the engine IS the legacy oracle jitted with the index's precomputed
+    # norms: bit-identical
+    ref_s, ref_i = jax.jit(
+        lambda qq, cc, nn: knn(qq, cc, 5, metric, c_sq_norms=nn))(
+            q, db, index.sq_norms)
+    np.testing.assert_array_equal(np.asarray(got.scores), np.asarray(ref_s))
+    np.testing.assert_array_equal(np.asarray(got.indices), np.asarray(ref_i))
+    # vs the plain legacy call (inline norms): identical neighbours; scores
+    # may differ by one FMA contraction (precomputed norms arrive as an
+    # input, so XLA fuses the combine differently)
+    leg_s, leg_i = knn(q, db, 5, metric)
+    np.testing.assert_array_equal(np.asarray(got.indices), np.asarray(leg_i))
+    np.testing.assert_allclose(np.asarray(got.scores), np.asarray(leg_s),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_mxu_backend_is_jitted_legacy_bitwise():
+    """The defining identity: every engine distance query == jax.jit of the
+    legacy free function fed the index's precomputed ||c||^2."""
+    q, db = _vectors()
+    index = VectorIndex.from_database(db)
+    engine = index.engine(pad_multiple=8)
+    ref = jax.jit(lambda qq, cc, nn: radius_search(
+        qq, cc, 5.0, 12, c_sq_norms=nn))(q, db, index.sq_norms)
+    got = engine.within(q, 5.0, 12)
+    for a, b in zip(got, ref):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    sim = jax.jit(lambda qq, cc, nn: cosine_similarity(
+        qq, cc, c_sq_norms=nn))(q, db, index.sq_norms)
+    np.testing.assert_array_equal(np.asarray(engine.similarity(q)),
+                                  np.asarray(sim))
+
+
+def test_within_matches_radius_search():
+    q, db = _vectors(seed=3, n_q=9, n_db=120, dim=16)
+    index = VectorIndex.from_database(db)
+    engine = index.engine(pad_multiple=8)
+    for metric, radius in (("euclidean", 5.0), ("cosine", 0.2)):
+        got = engine.within(q, radius, 12, metric)
+        ref = jax.jit(lambda qq, cc, nn: radius_search(
+            qq, cc, radius, 12, metric, c_sq_norms=nn))(
+                q, db, index.sq_norms)
+        for a, b, name in zip(got, ref, ("scores", "indices", "within")):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=name)
+        counts = engine.count_within(q, radius, metric)
+        np.testing.assert_array_equal(
+            np.asarray(counts),
+            np.asarray(jax.jit(lambda qq, cc, nn: radius_count(
+                qq, cc, radius, metric, c_sq_norms=nn))(
+                    q, db, index.sq_norms)))
+        # the in-range sets agree with the plain (eager) legacy call too
+        leg = radius_search(q, db, radius, 12, metric)
+        np.testing.assert_array_equal(np.asarray(got.indices),
+                                      np.asarray(leg[1]))
+
+
+def test_distance_padded_roundtrip_identity():
+    """Padded query batches return exactly the unpadded results."""
+    q, db = _vectors(n_q=21)  # pads to 24
+    index = VectorIndex.from_database(db)
+    tight = index.engine(pad_multiple=1)
+    padded = index.engine(pad_multiple=8)
+    for metric in ("euclidean", "angular", "cosine"):
+        a = tight.nearest(q, 5, metric)
+        b = padded.nearest(q, 5, metric)
+        assert b.scores.shape == (21, 5)
+        np.testing.assert_array_equal(np.asarray(a.scores),
+                                      np.asarray(b.scores))
+        np.testing.assert_array_equal(np.asarray(a.indices),
+                                      np.asarray(b.indices))
+    np.testing.assert_array_equal(
+        np.asarray(tight.count_within(q, 5.0)),
+        np.asarray(padded.count_within(q, 5.0)))
+
+
+def test_empty_batches_return_empty_results():
+    """Zero-row queries pad with a zero dummy lane and slice back to
+    empty — the legacy free functions accept them, so the engine must."""
+    q, db = _vectors()
+    engine = VectorIndex.from_database(db).engine(pad_multiple=8)
+    res = engine.nearest(q[:0], 4)
+    assert res.scores.shape == (0, 4) and res.indices.shape == (0, 4)
+    assert engine.count_within(q[:0], 5.0).shape == (0,)
+    scene, rays = _scene_and_rays(11, 100, 8)
+    empty = jax.tree_util.tree_map(lambda x: x[:0], rays)
+    rec = scene.engine(pad_multiple=8).trace(empty)
+    assert rec.t.shape == (0,) and rec.tri_index.shape == (0,)
+
+
+def test_similarity_matches_cosine():
+    q, db = _vectors()
+    index = VectorIndex.from_database(db)
+    got = index.engine(pad_multiple=8).similarity(q)
+    ref = cosine_similarity(q, db, c_sq_norms=index.sq_norms)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-6)
+
+
+def test_vector_index_owns_norms():
+    _, db = _vectors()
+    index = VectorIndex.from_database(db)
+    np.testing.assert_array_equal(
+        np.asarray(index.sq_norms),
+        np.asarray(jnp.sum(db.astype(jnp.float32) ** 2, axis=-1)))
+    assert index.size == 211 and index.dim == 24
+
+
+def test_pallas_backend_agrees():
+    """The Pallas kernel backend returns the same neighbours (scores to
+    kernel tolerance: the tiled accumulator sums K in blocks)."""
+    assert "pallas" in distance_backends() and "mxu" in distance_backends()
+    q, db = _vectors(n_q=16, n_db=64, dim=32)
+    engine = VectorIndex.from_database(db).engine(pad_multiple=8)
+    ref = engine.nearest(q, 5, "euclidean", backend="mxu")
+    got = engine.nearest(q, 5, "euclidean", backend="pallas")
+    np.testing.assert_array_equal(np.asarray(got.indices),
+                                  np.asarray(ref.indices))
+    np.testing.assert_allclose(np.asarray(got.scores),
+                               np.asarray(ref.scores), rtol=1e-4, atol=1e-4)
+    sim_ref = engine.similarity(q, backend="mxu")
+    sim_got = engine.similarity(q, backend="pallas")
+    np.testing.assert_allclose(np.asarray(sim_got), np.asarray(sim_ref),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_distance_validation():
+    q, db = _vectors()
+    engine = VectorIndex.from_database(db).engine()
+    with pytest.raises(ValueError, match="unknown metric"):
+        engine.nearest(q, 5, "manhattan")
+    with pytest.raises(ValueError, match="radius metric"):
+        engine.within(q, 1.0, 5, "angular")
+    with pytest.raises(ValueError, match="unknown distance backend"):
+        engine.nearest(q, 5, backend="gpu")
+    with pytest.raises(ValueError, match="no VectorIndex"):
+        QueryEngine().nearest(q, 5)
+
+
+# ---------------------------------------------------------------------------
+# satellites: serving precondition
+# ---------------------------------------------------------------------------
+
+
+def test_serving_engine_rejects_overlong_prompt():
+    """The max_len precondition must be a ValueError (asserts vanish under
+    ``python -O``), raised before any compute touches the model."""
+    from repro.serving import Engine
+    eng = Engine(cfg=None, params=None, max_len=8)  # cfg unused pre-check
+    with pytest.raises(ValueError, match="max_len"):
+        eng.generate(jnp.zeros((1, 6), jnp.int32), max_new_tokens=4)
