@@ -5,6 +5,10 @@ built once (precomputed ||c||^2 norms, jit-cached compiled functions).
 Compares the paper's beat-form (16 lanes/beat + accumulator) against the
 TPU-native MXU backend (DESIGN.md §2) and the Pallas kernel backend: the
 ratio is the speedup "reusing the MXU" buys over lane-serial processing.
+
+Every row carries ``devices=`` / ``chunk_size=``; on a multi-device host a
+sharded-vs-single-device comparison section is appended (queries
+data-parallel over the mesh, database replicated — ``core/dispatch.py``).
 """
 from __future__ import annotations
 
@@ -34,11 +38,12 @@ def run(rows):
     c = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
 
     index = VectorIndex.from_database(c)
-    engine = index.engine()
+    engine = index.engine(shard=1)
 
     dt_mxu = _t(lambda qq: engine.scores(qq, "euclidean", backend="mxu"), q)
     rows.append(("euclid_mxu_form_512x4096x256", dt_mxu * 1e6,
-                 f"pair_dists_per_s={m * n / dt_mxu:.3e}"))
+                 f"pair_dists_per_s={m * n / dt_mxu:.3e};"
+                 f"devices=1;chunk_size=none"))
 
     # beat form: one query row against the database per call (lane-serial)
     beat = jax.jit(lambda qi, cc: euclidean_distance_sq(
@@ -60,4 +65,25 @@ def run(rows):
     rows.append(("knn_top8_euclidean", dt_knn * 1e6,
                  f"queries_per_s={m / dt_knn:.3e};"
                  f"jit_cache_entries={info.entries};"
-                 f"jit_cache_hits={info.hits}"))
+                 f"jit_cache_hits={info.hits};"
+                 f"devices=1;chunk_size=none"))
+
+    # chunked streaming: the (chunk, N) score matrix is the peak
+    # intermediate instead of the full (M, N) — the memory-bounded mode
+    chunked = index.engine(shard=1, chunk_size=128)
+    dt_ch = _t(lambda qq: chunked.nearest(qq, 8, "euclidean"), q)
+    rows.append(("knn_top8_euclidean_chunked", dt_ch * 1e6,
+                 f"queries_per_s={m / dt_ch:.3e};"
+                 f"overhead_vs_unchunked={dt_ch / dt_knn:.2f}x;"
+                 f"jit_cache_entries={chunked.cache_info().entries};"
+                 f"devices=1;chunk_size=128"))
+
+    # sharded-vs-single-device comparison (bit-identical results)
+    n_dev = jax.local_device_count()
+    if n_dev > 1:
+        sharded = index.engine(shard="auto")
+        dt_sh = _t(lambda qq: sharded.nearest(qq, 8, "euclidean"), q)
+        rows.append((f"knn_top8_euclidean_sharded_{n_dev}dev", dt_sh * 1e6,
+                     f"queries_per_s={m / dt_sh:.3e};"
+                     f"speedup_vs_single={dt_knn / dt_sh:.2f}x;"
+                     f"devices={n_dev};chunk_size=none"))

@@ -13,6 +13,11 @@ plus the wavefront any-hit mode (occlusion queries retire on first hit).
 The engine owns the jit cache, so the second (timed) call measures the
 compiled steady state.  Rows report rays/sec and the per-ray datapath job
 counts so scheduling improvements show up as measurements, not guesses.
+
+Every row carries ``devices=`` / ``chunk_size=`` so the execution schedule
+is part of the measurement; on a multi-device host (or under
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``) a sharded-vs-
+single-device comparison section is appended (``core/dispatch.py``).
 """
 from __future__ import annotations
 
@@ -54,7 +59,7 @@ def run(rows):
     tgt = rng.uniform(-0.5, 0.5, (n_rays, 3)).astype(np.float32)
     rays = make_ray(jnp.asarray(org), jnp.asarray(tgt - org))
 
-    engine = scene.engine()
+    engine = scene.engine(shard=1)
     backends = {
         "per_ray": lambda r: engine.trace(r, backend="per_ray"),
         "wavefront": lambda r: engine.trace(r, backend="wavefront"),
@@ -68,4 +73,31 @@ def run(rows):
                      f"quadbox_jobs_per_ray={float(rec.quadbox_jobs.mean()):.1f};"
                      f"tri_jobs_per_ray={float(rec.triangle_jobs.mean()):.1f};"
                      f"hit_rate={float(rec.hit.mean()):.2f};"
-                     f"batched_rounds={int(rec.rounds)}"))
+                     f"batched_rounds={int(rec.rounds)};"
+                     f"devices=1;chunk_size=none"))
+
+    # chunked streaming: same batch through fixed-size microbatch blocks
+    # (one compiled function for all chunks; peak memory ~ chunk_size rows)
+    chunked = scene.engine(shard=1, chunk_size=64)
+    rec, dt = _time(lambda r: chunked.trace(r, backend="wavefront"), rays)
+    rows.append(("traversal_wavefront_chunked_256rays_2k_tris",
+                 dt / n_rays * 1e6,
+                 f"rays_per_s={n_rays / dt:.3e};"
+                 f"jit_cache_entries={chunked.cache_info().entries};"
+                 f"devices=1;chunk_size=64"))
+
+    # sharded-vs-single-device comparison (data-parallel rays over the
+    # host mesh; bit-identical results, so the ratio is pure scheduling)
+    n_dev = jax.local_device_count()
+    if n_dev > 1:
+        _, dt_single = _time(lambda r: engine.trace(r, backend="wavefront"),
+                             rays)
+        sharded = scene.engine(shard="auto")
+        rec, dt_sh = _time(lambda r: sharded.trace(r, backend="wavefront"),
+                           rays)
+        rows.append((f"traversal_wavefront_sharded_{n_dev}dev_256rays",
+                     dt_sh / n_rays * 1e6,
+                     f"rays_per_s={n_rays / dt_sh:.3e};"
+                     f"speedup_vs_single={dt_single / dt_sh:.2f}x;"
+                     f"batched_rounds={int(rec.rounds)};"
+                     f"devices={n_dev};chunk_size=none"))

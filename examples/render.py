@@ -6,10 +6,18 @@ depth); every query goes through one ``QueryEngine``: primary rays are
 closest-hit traces, hard shadows are extent-limited ``"shadow"`` traces
 toward a point light — the sphere casts a shadow onto the plane.
 
+The engine is built with ``shard="auto"`` (data-parallel rays across every
+local device — replicated scene, bit-identical image) and a ``chunk_size``
+so the whole framebuffer streams through fixed-size microbatches of rays
+sharing one compiled trace.
+
 Run:  PYTHONPATH=src python examples/render.py [out.pgm]
+      XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+          PYTHONPATH=src python examples/render.py  # same image, 8-way
 """
 import sys
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -62,9 +70,13 @@ def main():
     out_path = sys.argv[1] if len(sys.argv) > 1 else "/tmp/render.pgm"
     tris, tri = build_scene()
     scene = Scene.from_triangles(tri)
-    engine = scene.engine()
+    # shard="auto": rays data-parallel over every local device (scene
+    # replicated, image bit-identical); chunk_size: the framebuffer streams
+    # through fixed-size ray microbatches sharing one compiled trace
+    engine = scene.engine(shard="auto", chunk_size=4096)
     print(f"scene: {scene.num_triangles} triangles (sphere + ground), "
-          f"BVH4 depth {scene.depth}")
+          f"BVH4 depth {scene.depth}, {jax.local_device_count()} device(s), "
+          f"chunk_size=4096")
 
     # pinhole camera above the sphere looking slightly down: sphere, ground
     # and the sphere's cast shadow are all in frame

@@ -17,6 +17,14 @@ Build a session once, query it everywhere (DESIGN.md §5):
 Backends are pluggable (``backend="per_ray" | "wavefront" | "pallas" |
 "mxu" | "auto"``) and every backend returns the same result record; the
 legacy free functions in ``repro.core`` remain the semantic oracles.
+
+Execution scales without changing results (DESIGN.md §6): pass
+``shard="auto" | int`` to data-parallel a batch across local devices
+(scene/index replicated; bit-identical output) and ``chunk_size=`` to
+stream bigger-than-memory batches through fixed-size microbatches::
+
+    engine = scene.engine(shard="auto", chunk_size=65536)
+    hits = engine.trace(million_rays)        # sharded + chunked, bit-equal
 """
 from .core.session import (  # noqa: F401
     CacheInfo,

@@ -14,6 +14,15 @@ The implicit layout keeps the builder allocation-free and jittable: node ``k``
 has children ``4k+1 .. 4k+4``; level ``l`` starts at offset ``(4^l - 1) / 3``.
 Empty (padded) leaves carry inverted boxes (lo=+inf, hi=-inf) which can never
 intersect, so traversal needs no validity bitmap.
+
+Exactly-degenerate triangles (zero area: ``(b-a) x (c-a) == 0``, covering
+point and exactly-colinear soups) are culled into the same padded-leaf slot
+at build time.  In exact arithmetic they can never be hit (every edge
+function is 0, so ``t_denom == 0``), but under XLA's CPU mul->add FMA
+contraction (see ``kernels/common.py: round_stage``) the fused edge
+functions keep a rounding residue and a "hit" at a garbage t can slip
+through the jitted engines.  Culling at build is exact, engine-independent,
+and free at query time (``tests/test_degenerate.py`` pins it).
 """
 from __future__ import annotations
 
@@ -81,11 +90,18 @@ def build_bvh4(tri: Triangle, depth: int | None = None) -> BVH4:
 
     order = jnp.argsort(codes).astype(jnp.int32)  # (N,)
     pad = n_leaves - n
-    leaf_tri = jnp.concatenate([order, jnp.full((pad,), -1, jnp.int32)])
+    # degenerate cull: zero-area triangles become padded leaves (tri -1,
+    # inverted box) so no engine can ever report them as hits
+    nondegen = jnp.any(jnp.cross(tri.b - tri.a, tri.c - tri.a) != 0.0,
+                       axis=-1)[order]
+    leaf_tri = jnp.concatenate(
+        [jnp.where(nondegen, order, -1), jnp.full((pad,), -1, jnp.int32)])
     leaf_lo = jnp.concatenate(
-        [boxes.lo[order], jnp.full((pad, 3), jnp.inf, jnp.float32)])
+        [jnp.where(nondegen[:, None], boxes.lo[order], jnp.inf),
+         jnp.full((pad, 3), jnp.inf, jnp.float32)])
     leaf_hi = jnp.concatenate(
-        [boxes.hi[order], jnp.full((pad, 3), -jnp.inf, jnp.float32)])
+        [jnp.where(nondegen[:, None], boxes.hi[order], -jnp.inf),
+         jnp.full((pad, 3), -jnp.inf, jnp.float32)])
 
     # Bottom-up AABB fit: D vectorised sweeps (4-to-1 reductions).
     levels_lo, levels_hi = [leaf_lo], [leaf_hi]

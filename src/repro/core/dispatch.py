@@ -1,0 +1,198 @@
+"""Sharded + chunked query execution mechanics (DESIGN.md §6).
+
+The paper's datapath scales by replicating one shared pipeline; RTNN's
+batched-query formulation is what keeps such a pipeline saturated.  This
+module is the session layer's version of that replication: it decides how a
+query batch is *placed* (data-parallel over a 1-D device mesh, scene/index
+replicated) and *scheduled* (fixed-size microbatch chunks sharing one
+compiled program), without touching any backend's arithmetic.
+
+The execution pipeline for one query is::
+
+    pad -> shard -> query -> unshard -> unpad
+
+* **pad** — each chunk is padded so every *shard* receives a lane multiple
+  of rows (``block = shards * ceil(rows_per_shard to pad_multiple)``), by
+  repeating the chunk's row 0 (always a valid element; empty guard lives in
+  the session layer, which never dispatches 0 rows here).
+* **shard** — the chunk's leading axis is split over the mesh
+  (``parallel.sharding.batch_sharded``); the scene/index operands are
+  replicated once per mesh (``parallel.sharding.replicated``) and closed
+  over, so the per-shard computation is *literally* the single-device
+  computation on that shard's rows.  No collectives: bit-parity with the
+  single-device path is structural, not numerical luck
+  (``tests/test_fuzz_backends.py`` fuzzes it).
+* **query** — one jitted ``shard_map`` per (backend, static config, block
+  shape); every chunk re-enters the same compiled program, so a
+  million-ray batch pays one trace and ``n_blocks`` executions with peak
+  memory bounded by the block size.
+* **unshard/unpad** — per-row outputs concatenate across chunks and slice
+  back to the caller's row count; per-chunk scalar statistics (wavefront
+  ``rounds``) reduce by ``max``, which matches the single-device value
+  exactly (a ray is active for exactly ``quadbox_jobs`` consecutive
+  rounds, so the batch round count is the max over rays wherever those
+  rays execute).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..parallel.compat import make_device_mesh, shard_map_unchecked
+from ..parallel.sharding import batch_sharded, replicated  # noqa: F401
+
+#: mesh axis name carrying the data-parallel ray/query batch
+BATCH_AXIS = "shards"
+
+_MESHES: dict[tuple[str, int], Mesh] = {}
+
+
+def available_devices() -> int:
+    """Device count the ``shard="auto"`` policy sees."""
+    return jax.local_device_count()
+
+
+def resolve_shards(shard, n_rows: Optional[int] = None) -> int:
+    """``shard="auto" | int | None`` -> a concrete shard count.
+
+    ``"auto"`` learns the local device count (capped at the batch size —
+    a 3-ray batch on 8 devices gains nothing from 5 idle replicas);
+    an explicit int is honored as-is but must not exceed the device count.
+    """
+    if shard is None or shard == 1:
+        return 1
+    n_dev = available_devices()
+    if shard == "auto":
+        shards = n_dev
+        if n_rows is not None:
+            shards = max(1, min(shards, n_rows))
+        return shards
+    shards = int(shard)
+    if shards < 1:
+        raise ValueError(f"shard must be >= 1, got {shard!r}")
+    if shards > n_dev:
+        raise ValueError(
+            f"shard={shards} exceeds the {n_dev} available device(s)")
+    return shards
+
+
+def device_mesh(shards: int, axis_name: str = BATCH_AXIS) -> Mesh:
+    """The (cached) 1-D query mesh over the first ``shards`` devices."""
+    key = (axis_name, shards)
+    mesh = _MESHES.get(key)
+    if mesh is None:
+        mesh = _MESHES[key] = make_device_mesh(shards, axis_name)
+    return mesh
+
+
+# ---------------------------------------------------------------------------
+# Padding policy (one definition; the session layer imports from here)
+# ---------------------------------------------------------------------------
+
+
+def ceil_to(n: int, multiple: int) -> int:
+    return max(1, -(-n // multiple) * multiple)
+
+
+def pad_leading(tree, n_to: int):
+    """Pad every leading-axis leaf to ``n_to`` rows by repeating row 0
+    (always a valid element, so padded lanes trace/score harmlessly).
+    Empty batches pad with zeros — rows are independent in every backend,
+    so a degenerate lane is harmless and sliced away on unpad."""
+    def pad(x):
+        n = x.shape[0]
+        if n == n_to:
+            return x
+        if n:
+            rep = jnp.broadcast_to(x[:1], (n_to - n,) + x.shape[1:])
+        else:
+            rep = jnp.zeros((n_to - n,) + x.shape[1:], x.dtype)
+        return jnp.concatenate([x, rep], axis=0)
+
+    return jax.tree_util.tree_map(pad, tree)
+
+
+# ---------------------------------------------------------------------------
+# Execution plan: how one query batch is padded, chunked and sharded
+# ---------------------------------------------------------------------------
+
+
+class ExecPlan(NamedTuple):
+    """A resolved (rows, chunking, sharding) schedule for one query."""
+
+    n: int  # caller's row count (> 0; empty batches never reach dispatch)
+    block: int  # rows per executed call; shards * lane-multiple per shard
+    n_blocks: int  # ceil(n / block) chunked calls through one compiled fn
+    shards: int  # 1 = single-device (no shard_map wrapping)
+
+    @property
+    def key(self) -> tuple:
+        """The plan's contribution to the compiled-function cache key."""
+        return (self.shards, self.block)
+
+    @property
+    def mesh(self) -> Optional[Mesh]:
+        return device_mesh(self.shards) if self.shards > 1 else None
+
+
+def make_plan(n: int, *, pad_multiple: int, shards: int = 1,
+              chunk_size: Optional[int] = None) -> ExecPlan:
+    """Schedule ``n`` rows into fixed-size blocks.
+
+    The block is ``chunk_size`` (the whole batch when None) rounded up so
+    that each of the ``shards`` shards receives a lane multiple of rows —
+    per-shard padding composing with the pad-to-lane policy.  With
+    ``shards=1, chunk_size=None`` this degenerates to the original
+    single-call ``ceil_to(n, pad_multiple)`` behavior.
+    """
+    if n <= 0:
+        raise ValueError("make_plan needs n >= 1; guard empty batches first")
+    if chunk_size is not None and int(chunk_size) < 1:
+        raise ValueError(f"chunk_size must be >= 1, got {chunk_size!r}")
+    rows = n if chunk_size is None else min(int(chunk_size), n)
+    per_shard = ceil_to(math.ceil(rows / shards), pad_multiple)
+    block = per_shard * shards
+    return ExecPlan(n=n, block=block, n_blocks=-(-n // block), shards=shards)
+
+
+def split_blocks(tree, plan: ExecPlan):
+    """Yield the plan's padded (and, on a mesh, batch-sharded) blocks.
+
+    Every yielded block has exactly ``plan.block`` rows — the last one
+    padded by repeating its own row 0 — so all blocks re-enter one
+    compiled function.
+    """
+    mesh = plan.mesh
+    for i in range(plan.n_blocks):
+        lo = i * plan.block
+        chunk = jax.tree_util.tree_map(
+            lambda x: x[lo:lo + plan.block], tree)
+        chunk = pad_leading(chunk, plan.block)
+        if mesh is not None:
+            chunk = batch_sharded(mesh, chunk, BATCH_AXIS)
+        yield chunk
+
+
+def concat_rows(blocks: list, n: int):
+    """Unshard + unpad: stitch per-row block results back together and
+    slice to the caller's ``n`` rows.  All leaves must be per-row."""
+    if len(blocks) == 1:
+        out = blocks[0]
+    else:
+        out = jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *blocks)
+    return jax.tree_util.tree_map(lambda x: x[:n], out)
+
+
+def shard_rows(fn, mesh: Mesh, axis: str = BATCH_AXIS):
+    """Data-parallel ``fn`` over rows: each device runs the unchanged
+    single-device computation on its row shard (scene/index operands are
+    closed over, replicated).  Every output leaf must carry the row axis
+    first — scalar statistics must be lifted to a length-1 axis so they
+    come back as one value per shard."""
+    return shard_map_unchecked(fn, mesh, in_specs=(P(axis),),
+                               out_specs=P(axis))

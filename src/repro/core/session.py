@@ -21,6 +21,15 @@ against a prepared acceleration structure:
   automatic pad-to-lane-multiple batching with result unpadding — the
   padding policy defined once instead of ad hoc in every example.
 
+Execution placement and scheduling live one layer down, in
+:mod:`repro.core.dispatch` (DESIGN.md §6): ``shard="auto" | int`` fans a
+batch data-parallel across a device mesh (scene/index replicated, rays /
+queries row-sharded) and ``chunk_size=`` streams it through fixed-size
+microbatch blocks that all re-enter one compiled function.  Both knobs
+compose with the padding policy and preserve the bit-parity contract —
+the per-shard computation is literally the single-device computation on a
+row subset (``tests/test_fuzz_backends.py`` fuzzes the equivalence).
+
 Every backend returns the same result record (:class:`TraceResult`,
 :class:`NearestResult`, :class:`WithinResult`), and results are
 *bit-identical* to the legacy free functions (``trace_rays``,
@@ -36,6 +45,15 @@ import jax
 import jax.numpy as jnp
 
 from .bvh import BVH4, build_bvh4, bvh4_depth
+from .dispatch import (
+    ExecPlan,
+    concat_rows,
+    make_plan,
+    replicated,
+    resolve_shards,
+    shard_rows,
+    split_blocks,
+)
 from .knn import (
     METRICS,
     RADIUS_METRICS,
@@ -110,7 +128,8 @@ class CacheInfo(NamedTuple):
 
 
 # ---------------------------------------------------------------------------
-# Padding policy (defined once; every query flows through it)
+# Padding policy (defined once, in core/dispatch; every query flows
+# through an ExecPlan built there)
 # ---------------------------------------------------------------------------
 
 
@@ -120,39 +139,10 @@ def default_pad_multiple() -> int:
     return 128 if jax.default_backend() == "tpu" else 8
 
 
-def _ceil_to(n: int, multiple: int) -> int:
-    return max(1, -(-n // multiple) * multiple)
-
-
-def _pad_leading(tree, n_to: int):
-    """Pad every leading-axis leaf to ``n_to`` rows by repeating row 0
-    (always a valid element, so padded lanes trace/score harmlessly).
-    Empty batches pad with zeros — rows are independent in every backend,
-    so a degenerate lane is harmless and sliced away on unpad."""
-    def pad(x):
-        n = x.shape[0]
-        if n == n_to:
-            return x
-        if n:
-            rep = jnp.broadcast_to(x[:1], (n_to - n,) + x.shape[1:])
-        else:
-            rep = jnp.zeros((n_to - n,) + x.shape[1:], x.dtype)
-        return jnp.concatenate([x, rep], axis=0)
-
-    return jax.tree_util.tree_map(pad, tree)
-
-
-def _unpad_leading(tree, n_padded: int, n: int):
-    """Slice per-element leaves back to the caller's batch size; scalar
-    leaves (e.g. ``rounds``) pass through untouched."""
-    if n_padded == n:
-        return tree
-    return jax.tree_util.tree_map(
-        lambda x: x[:n] if x.ndim >= 1 and x.shape[0] == n_padded else x, tree)
-
-
-def _shape_key(tree) -> tuple:
-    return tuple((tuple(x.shape), str(x.dtype))
+def _elem_key(tree) -> tuple:
+    """Per-row signature: trailing shapes + dtypes.  Combined with the
+    plan's (shards, block) this pins the full padded operand shapes."""
+    return tuple((tuple(x.shape[1:]), str(x.dtype))
                  for x in jax.tree_util.tree_leaves(tree))
 
 
@@ -388,6 +378,24 @@ class QueryEngine:
     ``backend="auto"`` picks per query: wavefront for traced batches
     (per-ray oracle for tiny closest-hit batches), Pallas kernels for
     distance queries on TPU and the MXU jnp form elsewhere.
+
+    Two execution knobs ride on every query (``core/dispatch.py``,
+    DESIGN.md §6), settable engine-wide here or overridden per call:
+
+    * ``shard="auto" | int`` — data-parallel the batch's rows over a 1-D
+      device mesh; the scene / index is replicated once per mesh and the
+      per-shard computation is the unchanged single-device computation on
+      that shard's rows (no collectives, so results stay bit-identical;
+      ``"auto"`` = all local devices, capped at the batch size; ``1``
+      disables).
+    * ``chunk_size=`` — execute in fixed-size microbatch blocks that all
+      re-enter one compiled function (one engine-cache entry however many
+      chunks), bounding peak intermediate memory for million-ray batches;
+      results are assembled across chunks and wavefront ``rounds`` reduces
+      by max, which equals the single-device value exactly.
+
+    Zero-row batches short-circuit to empty typed results without
+    compiling or executing anything.
     """
 
     #: closest-hit batches up to this size go to the per-ray oracle under
@@ -397,14 +405,18 @@ class QueryEngine:
     def __init__(self, scene: Scene | None = None,
                  index: VectorIndex | None = None, *,
                  backend: str = "auto", pad_multiple: int | None = None,
+                 shard: str | int = "auto", chunk_size: int | None = None,
                  interpret: bool | None = None):
         self.scene = scene
         self.index = index
         self.default_backend = backend
+        self.default_shard = shard
+        self.default_chunk_size = chunk_size
         self.pad_multiple = (default_pad_multiple() if pad_multiple is None
                              else max(1, int(pad_multiple)))
         self.interpret = interpret  # None = auto (off-TPU -> interpret)
         self._cache: dict = {}
+        self._placed: dict = {}  # (kind, shards) -> replicated Scene/index
         self._hits = 0
         self._misses = 0
 
@@ -415,7 +427,8 @@ class QueryEngine:
 
     def cache_clear(self) -> None:
         self._cache.clear()
-        self._hits = self._misses = 0
+        self._placed.clear()  # replicated scene/index copies are the big
+        self._hits = self._misses = 0  # objects; release them too
 
     def _compiled(self, key, build):
         fn = self._cache.get(key)
@@ -431,11 +444,15 @@ class QueryEngine:
 
     def resolve_trace_backend(self, ray_type: str, n_rays: int,
                               t_min: float = 0.0,
-                              max_rounds: int | None = None) -> str:
+                              max_rounds: int | None = None,
+                              shards: int = 1) -> str:
         """The backend "auto" picks for a trace: per-ray oracle for tiny
         plain closest-hit batches, wavefront everywhere else (including
-        any query the oracle cannot express: t_min, max_rounds)."""
-        if (ray_type == "closest" and n_rays <= self.AUTO_PER_RAY_MAX
+        any query the oracle cannot express — t_min, max_rounds — and any
+        sharded batch: a multi-device frontier is by definition not
+        tiny)."""
+        if (shards == 1 and ray_type == "closest"
+                and n_rays <= self.AUTO_PER_RAY_MAX
                 and not t_min and max_rounds is None):
             return "per_ray"
         return "wavefront"
@@ -446,14 +463,56 @@ class QueryEngine:
         only add overhead)."""
         return "pallas" if jax.default_backend() == "tpu" else "mxu"
 
+    # -- execution planning (sharding + chunking, core/dispatch.py) -------
+
+    def _resolve_shards(self, shard, n: int) -> int:
+        return resolve_shards(
+            self.default_shard if shard is None else shard, n)
+
+    def _plan(self, n: int, shards: int, chunk_size) -> ExecPlan:
+        if chunk_size is None:
+            chunk_size = self.default_chunk_size
+        return make_plan(n, pad_multiple=self.pad_multiple, shards=shards,
+                         chunk_size=chunk_size)
+
+    def _placed_scene(self, plan: ExecPlan) -> "Scene":
+        """The scene with its BVH replicated across the plan's mesh
+        (placed once per shard count, reused by every later query)."""
+        if plan.shards == 1:
+            return self.scene
+        key = ("scene", plan.shards)
+        placed = self._placed.get(key)
+        if placed is None:
+            placed = Scene(replicated(plan.mesh, self.scene.bvh),
+                           self.scene.depth)
+            self._placed[key] = placed
+        return placed
+
+    def _placed_index(self, plan: ExecPlan) -> "VectorIndex":
+        """The index with database + precomputed norms replicated across
+        the plan's mesh."""
+        if plan.shards == 1:
+            return self.index
+        key = ("index", plan.shards)
+        placed = self._placed.get(key)
+        if placed is None:
+            placed = VectorIndex(
+                replicated(plan.mesh, self.index.database),
+                sq_norms=replicated(plan.mesh, self.index.sq_norms))
+            self._placed[key] = placed
+        return placed
+
     # -- traversal queries -------------------------------------------------
 
     def trace(self, rays, ray_type: str = "closest", *,
               backend: str | None = None, t_min: float | None = None,
-              max_rounds: int | None = None) -> TraceResult:
+              max_rounds: int | None = None, shard=None,
+              chunk_size: int | None = None) -> TraceResult:
         """Traverse a ray batch.  ``ray_type`` is ``"closest"`` | ``"any"``
         | ``"shadow"`` (CrossRT-style split); results are bit-identical to
-        the legacy ``trace_rays`` / ``trace_wavefront`` entry points."""
+        the legacy ``trace_rays`` / ``trace_wavefront`` entry points —
+        whatever ``shard`` / ``chunk_size`` (None = the engine defaults)
+        schedule the batch onto."""
         if self.scene is None:
             raise ValueError("QueryEngine has no Scene; construct with "
                              "QueryEngine(scene=...) or Scene.engine()")
@@ -464,9 +523,11 @@ class QueryEngine:
             t_min = SHADOW_T_MIN if ray_type == "shadow" else 0.0
         t_min = float(t_min)
         n = rays.origin.shape[0]
+        shards = self._resolve_shards(shard, n)
         name = backend or self.default_backend
         if name == "auto":
-            name = self.resolve_trace_backend(ray_type, n, t_min, max_rounds)
+            name = self.resolve_trace_backend(ray_type, n, t_min, max_rounds,
+                                              shards=shards)
         if name not in _TRACE_BACKENDS:
             raise ValueError(f"unknown trace backend {name!r} "
                              f"(registered: {trace_backends()})")
@@ -474,25 +535,57 @@ class QueryEngine:
         if ray_type not in supported:
             raise ValueError(f"backend {name!r} supports ray types "
                              f"{supported}, got {ray_type!r}")
+        if n == 0:  # empty guard: typed empty result, nothing compiled
+            return TraceResult(
+                t=jnp.zeros((0,), jnp.float32),
+                tri_index=jnp.zeros((0,), jnp.int32),
+                hit=jnp.zeros((0,), bool),
+                quadbox_jobs=jnp.zeros((0,), jnp.int32),
+                triangle_jobs=jnp.zeros((0,), jnp.int32),
+                rounds=jnp.int32(0))
 
-        padded = _pad_leading(rays, _ceil_to(n, self.pad_multiple))
-        n_padded = padded.origin.shape[0]
-        key = ("trace", name, ray_type, t_min, max_rounds,
-               _shape_key(padded))
-        fn = self._compiled(
-            key, lambda: build(self.scene, ray_type, t_min, max_rounds))
-        return _unpad_leading(fn(padded), n_padded, n)
+        plan = self._plan(n, shards, chunk_size)
+        key = ("trace", name, ray_type, t_min, max_rounds) + plan.key \
+            + _elem_key(rays)
+
+        def build_fn():
+            run = build(self._placed_scene(plan), ray_type, t_min,
+                        max_rounds)
+            if plan.shards == 1:
+                return run
+
+            def per_shard(r):
+                rec = run(r)
+                # lift the scalar round count to a length-1 row axis so the
+                # shard_map returns one value per shard (reduced below)
+                return rec._replace(rounds=jnp.atleast_1d(rec.rounds))
+
+            return shard_rows(per_shard, plan.mesh)
+
+        fn = self._compiled(key, build_fn)
+        outs = [fn(block) for block in split_blocks(rays, plan)]
+        # streamed assembly: per-ray rows concatenate across chunks; the
+        # batch-level round count is the max over chunks and shards, which
+        # equals the single-device value (a ray is active for exactly
+        # quadbox_jobs consecutive rounds wherever it executes)
+        rounds = jnp.max(jnp.stack(
+            [jnp.max(jnp.atleast_1d(o.rounds)) for o in outs]))
+        rows = concat_rows([o._replace(rounds=None) for o in outs], n)
+        return rows._replace(rounds=rounds)
 
     def occluded(self, rays, *, t_min: float = SHADOW_T_MIN,
-                 backend: str | None = None) -> jax.Array:
+                 backend: str | None = None, shard=None,
+                 chunk_size: int | None = None) -> jax.Array:
         """Boolean shadow/visibility query (extent-limited any-hit)."""
         return self.trace(rays, ray_type="shadow", t_min=t_min,
-                          backend=backend).hit
+                          backend=backend, shard=shard,
+                          chunk_size=chunk_size).hit
 
     # -- distance queries --------------------------------------------------
 
     def _distance_fn(self, kind: str, queries, metric: str,
-                     backend: str | None, statics: tuple, epilogue):
+                     backend: str | None, statics: tuple, epilogue,
+                     empty, shard=None, chunk_size: int | None = None):
         if self.index is None:
             raise ValueError("QueryEngine has no VectorIndex; construct "
                              "with QueryEngine(index=...) or "
@@ -505,30 +598,43 @@ class QueryEngine:
                              f"(registered: {distance_backends()})")
         q = jnp.asarray(queries)
         n = q.shape[0]
-        padded = _pad_leading(q, _ceil_to(n, self.pad_multiple))
-        key = (kind, name, metric) + statics + _shape_key(padded)
+        shards = self._resolve_shards(shard, n)  # validates before guard
+        if n == 0:  # empty guard: typed empty result, nothing compiled
+            return empty()
+        plan = self._plan(n, shards, chunk_size)
+        key = (kind, name, metric) + statics + plan.key + _elem_key(q)
         build_scores = _DISTANCE_BACKENDS[name]
 
         def build():
-            score_fn = build_scores(self.index, metric, self.interpret)
-            return lambda qq: epilogue(score_fn(qq))
+            score_fn = build_scores(self._placed_index(plan), metric,
+                                    self.interpret)
+            run = lambda qq: epilogue(score_fn(qq))  # noqa: E731
+            if plan.shards == 1:
+                return run
+            return shard_rows(run, plan.mesh)
 
         fn = self._compiled(key, build)
-        return _unpad_leading(fn(padded), padded.shape[0], n)
+        return concat_rows([fn(block) for block in split_blocks(q, plan)],
+                           n)
 
     def nearest(self, queries, k: int, metric: str = "euclidean", *,
-                backend: str | None = None) -> NearestResult:
+                backend: str | None = None, shard=None,
+                chunk_size: int | None = None) -> NearestResult:
         """Exact k-nearest neighbours against the index."""
         if metric not in METRICS:
             raise ValueError(f"unknown metric: {metric}")
         k = int(k)
         return self._distance_fn(
             "nearest", queries, metric, backend, (k,),
-            lambda s: NearestResult(*select_topk(s, k, metric)))
+            lambda s: NearestResult(*select_topk(s, k, metric)),
+            lambda: NearestResult(jnp.zeros((0, k), jnp.float32),
+                                  jnp.zeros((0, k), jnp.int32)),
+            shard=shard, chunk_size=chunk_size)
 
     def within(self, queries, radius: float, k: int,
                metric: str = "euclidean", *,
-               backend: str | None = None) -> WithinResult:
+               backend: str | None = None, shard=None,
+               chunk_size: int | None = None) -> WithinResult:
         """Fixed-radius query: best ``k`` in-range neighbours (the
         extent-limited shadow-ray twin, DESIGN.md §3)."""
         if metric not in RADIUS_METRICS:
@@ -536,34 +642,48 @@ class QueryEngine:
         radius, k = float(radius), int(k)
         return self._distance_fn(
             "within", queries, metric, backend, (radius, k),
-            lambda s: WithinResult(*select_within(s, radius, k, metric)))
+            lambda s: WithinResult(*select_within(s, radius, k, metric)),
+            lambda: WithinResult(jnp.zeros((0, k), jnp.float32),
+                                 jnp.zeros((0, k), jnp.int32),
+                                 jnp.zeros((0, k), bool)),
+            shard=shard, chunk_size=chunk_size)
 
     def count_within(self, queries, radius: float,
                      metric: str = "euclidean", *,
-                     backend: str | None = None) -> jax.Array:
+                     backend: str | None = None, shard=None,
+                     chunk_size: int | None = None) -> jax.Array:
         """How many database points fall within ``radius`` per query."""
         if metric not in RADIUS_METRICS:
             raise ValueError(f"unknown radius metric: {metric}")
         radius = float(radius)
         return self._distance_fn(
             "count_within", queries, metric, backend, (radius,),
-            lambda s: count_within_scores(s, radius, metric))
+            lambda s: count_within_scores(s, radius, metric),
+            lambda: jnp.zeros((0,), jnp.int32),
+            shard=shard, chunk_size=chunk_size)
 
     def scores(self, queries, metric: str = "euclidean", *,
-               backend: str | None = None) -> jax.Array:
+               backend: str | None = None, shard=None,
+               chunk_size: int | None = None) -> jax.Array:
         """The raw (M, N) score matrix (squared distances / similarities) —
         what MoE routers consume as logits."""
         if metric not in METRICS:
             raise ValueError(f"unknown metric: {metric}")
-        return self._distance_fn("scores", queries, metric, backend, (),
-                                 lambda s: s)
+        return self._distance_fn(
+            "scores", queries, metric, backend, (), lambda s: s,
+            lambda: jnp.zeros((0, self.index.size), jnp.float32),
+            shard=shard, chunk_size=chunk_size)
 
-    def similarity(self, queries, *, backend: str | None = None) -> jax.Array:
+    def similarity(self, queries, *, backend: str | None = None,
+                   shard=None, chunk_size: int | None = None) -> jax.Array:
         """Full cosine-similarity matrix (external-divider epilogue)."""
-        return self.scores(queries, "cosine", backend=backend)
+        return self.scores(queries, "cosine", backend=backend, shard=shard,
+                           chunk_size=chunk_size)
 
     def __repr__(self):
         return (f"QueryEngine(scene={self.scene!r}, index={self.index!r}, "
                 f"backend={self.default_backend!r}, "
                 f"pad_multiple={self.pad_multiple}, "
+                f"shard={self.default_shard!r}, "
+                f"chunk_size={self.default_chunk_size}, "
                 f"cache={self.cache_info()})")

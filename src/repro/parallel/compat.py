@@ -8,8 +8,43 @@ is ``tests/conftest.py:make_test_mesh`` (for ``jax.sharding.AxisType``).
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 if hasattr(jax, "shard_map"):
     shard_map = jax.shard_map
 else:  # jax 0.4.x
     from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def shard_map_unchecked(f, mesh, in_specs, out_specs):
+    """``shard_map`` with replication checking off, version-tolerantly.
+
+    The dispatch layer closes over replicated operands (BVH arrays, vector
+    databases) instead of threading them as explicit arguments; the
+    replication checker flags such closures on some jax versions.  The
+    disable knob was renamed ``check_rep`` -> ``check_vma`` when shard_map
+    was promoted, so feature-probe both before falling back to checked.
+    """
+    for kw in ("check_rep", "check_vma"):
+        try:
+            return shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **{kw: False})
+        except TypeError:
+            continue
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+
+def make_device_mesh(n_devices: int, axis_name: str = "shards"):
+    """A 1-D mesh over the first ``n_devices`` local devices.
+
+    Source-side twin of ``tests/conftest.py:make_test_mesh``: jax >= 0.5
+    wants ``axis_types=``, 0.4.x predates it (every axis implicitly Auto).
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh((n_devices,), (axis_name,),
+                             axis_types=(axis_type.Auto,))
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh((n_devices,), (axis_name,))
+    devices = np.asarray(jax.devices()[:n_devices])
+    return jax.sharding.Mesh(devices, (axis_name,))

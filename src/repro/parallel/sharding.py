@@ -241,3 +241,21 @@ class Rules:
 
 def make_rules(mesh: Mesh, plan: ParallelPlan) -> Rules:
     return Rules(mesh, plan)
+
+
+# ---------------------------------------------------------------------------
+# Generic tree placement (used by the query dispatch layer, core/dispatch.py)
+# ---------------------------------------------------------------------------
+
+
+def replicated(mesh: Mesh, tree) -> Any:
+    """Place every leaf fully replicated across ``mesh`` (the query layer's
+    scene/index placement: one copy of the BVH / database per device)."""
+    return jax.device_put(tree, NamedSharding(mesh, P()))
+
+
+def batch_sharded(mesh: Mesh, tree, axis: str = "shards") -> Any:
+    """Shard every leaf's leading (batch) axis over ``axis`` — the
+    data-parallel ray/query placement.  Leading dims must divide the axis
+    size (the dispatch layer pads them first)."""
+    return jax.device_put(tree, NamedSharding(mesh, P(axis)))

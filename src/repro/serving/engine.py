@@ -4,6 +4,16 @@ Thin, deterministic, jit-cached: one compiled prefill per prompt length
 bucket and one compiled decode step reused for every token.  The decode
 step is exactly what the ``decode_32k`` / ``long_500k`` dry-run cells
 lower.
+
+``batch_chunk=`` streams oversized request batches through fixed-size
+microbatches — the serving-side twin of the query layer's ``chunk_size``
+(``core/dispatch.py``): every chunk re-enters the same compiled
+prefill/decode pair (one KV cache of ``batch_chunk`` rows live at a time,
+bounding peak cache memory) and the last chunk pads by repeating its
+row 0.  Rows are independent, so greedy decode (``temperature == 0``) is
+bit-identical to the one-shot batch; sampled decode folds the chunk
+offset into ``rng`` so chunks draw *independent* noise (the one-shot
+batch's per-row noise positions cannot be reproduced chunk-locally).
 """
 from __future__ import annotations
 
@@ -19,11 +29,17 @@ from ..parallel.ctx import NO_PARALLEL, ParallelCtx
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params, ctx: ParallelCtx = NO_PARALLEL,
-                 max_len: int = 512):
+                 max_len: int = 512, batch_chunk: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.ctx = ctx
         self.max_len = max_len
+        if batch_chunk is not None:
+            batch_chunk = int(batch_chunk)
+            if batch_chunk < 1:
+                raise ValueError(
+                    f"batch_chunk must be >= 1, got {batch_chunk!r}")
+        self.batch_chunk = batch_chunk
         # cache donation: the KV cache is updated in place every step
         self._prefill = jax.jit(
             lambda p, b, c: prefill(cfg, ctx, p, b, c), donate_argnums=(2,))
@@ -43,6 +59,11 @@ class Engine:
                 f"prompt length {t} + max_new_tokens {max_new_tokens} "
                 f"exceeds max_len {self.max_len}; construct the Engine "
                 f"with a larger max_len")
+        if b == 0:
+            return jnp.zeros((0, max_new_tokens), jnp.int32)
+        if self.batch_chunk is not None and b > self.batch_chunk:
+            return self._generate_chunked(tokens, max_new_tokens,
+                                          temperature, rng, extra_inputs)
         cache = init_cache(self.cfg, b, self.max_len)
         batch = {"tokens": tokens}
         if extra_inputs:
@@ -56,6 +77,36 @@ class Engine:
             logits, cache = self._decode(self.params, cache, tok)
             tok = self._sample(logits[:, -1], temperature, rng, i + 1)
         return jnp.concatenate(out, axis=-1)
+
+    def _generate_chunked(self, tokens, max_new_tokens, temperature, rng,
+                          extra_inputs):
+        """Fixed-size microbatches through one compiled prefill/decode:
+        every chunk has exactly ``batch_chunk`` rows (the last padded by
+        repeating its row 0) so no chunk recompiles; outputs are sliced
+        back and concatenated in request order."""
+        b = tokens.shape[0]
+        chunk = self.batch_chunk
+        outs = []
+        for lo in range(0, b, chunk):
+            tok = tokens[lo:lo + chunk]
+            extra = ({k: v[lo:lo + chunk] for k, v in extra_inputs.items()}
+                     if extra_inputs else None)
+            n = tok.shape[0]
+            if n < chunk:  # pad the tail chunk by repeating its row 0
+                pad = lambda x: jnp.concatenate(  # noqa: E731
+                    [x, jnp.broadcast_to(x[:1], (chunk - n,) + x.shape[1:])])
+                tok = pad(tok)
+                extra = ({k: pad(v) for k, v in extra.items()}
+                         if extra else None)
+            # distinct noise per chunk: identical prompts in different
+            # chunks must not sample identical continuations
+            chunk_rng = None if rng is None else jax.random.fold_in(rng, lo)
+            # tok now has exactly batch_chunk rows, so this recursion takes
+            # the direct path (b > batch_chunk is false)
+            out = self.generate(tok, max_new_tokens, temperature, chunk_rng,
+                                extra)
+            outs.append(out[:n])
+        return jnp.concatenate(outs, axis=0)
 
     def _sample(self, logits, temperature, rng, i):
         if temperature <= 0.0 or rng is None:

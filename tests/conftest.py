@@ -45,7 +45,11 @@ def run_with_devices(code: str, n_devices: int = 8, timeout: int = 600) -> str:
     """
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
-    env["PYTHONPATH"] = os.path.abspath(SRC) + os.pathsep + TESTS
+    # prepend (not replace): packages reachable only via the caller's
+    # PYTHONPATH (e.g. hypothesis in some setups) stay importable
+    inherited = env.get("PYTHONPATH", "")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.abspath(SRC), TESTS] + ([inherited] if inherited else []))
     out = subprocess.run(
         [sys.executable, "-c", textwrap.dedent(code)], env=env,
         capture_output=True, text=True, timeout=timeout)

@@ -1,0 +1,230 @@
+"""Degenerate-geometry regressions, pinned across every backend.
+
+Edge geometry is where traversal engines usually diverge: zero-area
+triangles (t_denom == 0 in the Woop test), axis-aligned rays whose
+direction inverse is ±inf in two lanes, shadow rays whose acceptance
+window [t_min, extent] collapses to a point, and trees small enough that
+the root is already the leaf parent.  Each case pins (a) bit-agreement
+between the per-ray oracle, the wavefront engine, and the session
+backends, and (b) the concrete semantics where they are well defined
+(inclusive extent/t_min comparisons, misses on degenerate geometry).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import Scene, make_ray
+from repro.core import Triangle, trace_rays, trace_wavefront
+
+TRACE_FIELDS = ("t", "tri_index", "hit", "quadbox_jobs", "triangle_jobs")
+
+
+def _assert_all_backends_agree(scene, rays):
+    """Closest-hit: per-ray oracle == wavefront free fn == both engine
+    backends, bit for bit.  Any/shadow: engine == wavefront free fn."""
+    engine = scene.engine(pad_multiple=8, shard=1)
+    chunked = scene.engine(pad_multiple=8, shard=1, chunk_size=8)
+    oracle = trace_rays(scene.bvh, rays, scene.depth)
+    candidates = {
+        "free/wavefront": trace_wavefront(scene.bvh, rays, scene.depth),
+        "engine/per_ray": engine.trace(rays, backend="per_ray"),
+        "engine/wavefront": engine.trace(rays, backend="wavefront"),
+        "engine/chunked": chunked.trace(rays, backend="wavefront"),
+    }
+    for name, got in candidates.items():
+        for f in TRACE_FIELDS:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(got, f)), np.asarray(getattr(oracle, f)),
+                err_msg=f"{name}: {f}")
+    for ray_type in ("any", "shadow"):
+        ref = trace_wavefront(scene.bvh, rays, scene.depth,
+                              ray_type=ray_type)
+        got = engine.trace(rays, ray_type=ray_type)
+        for f in TRACE_FIELDS:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(got, f)), np.asarray(getattr(ref, f)),
+                err_msg=f"{ray_type}: {f}")
+    return oracle
+
+
+def _rays_at(targets, origin=(-3.0, 0.1, 0.2)):
+    org = np.tile(np.asarray(origin, np.float32), (len(targets), 1))
+    tgt = np.asarray(targets, np.float32)
+    return make_ray(jnp.asarray(org), jnp.asarray(tgt - org))
+
+
+# ---------------------------------------------------------------------------
+# zero-area triangles
+# ---------------------------------------------------------------------------
+
+
+def test_all_degenerate_scene_never_hits():
+    """A soup of point- and line-degenerate triangles: every backend
+    agrees, and nothing is ever hit (t_denom == 0 -> no accepted hit)."""
+    p = np.asarray([[0.3, 0.1, 0.2]], np.float32)
+    tris = np.concatenate([
+        np.repeat(p, 3, 0)[None],  # point triangle: a == b == c
+        np.stack([p[0], p[0] + [1, 0, 0], p[0] + [2, 0, 0]])[None],  # colinear
+        np.stack([p[0], p[0], p[0] + [0, 1, 0]])[None],  # edge: a == b
+    ]).astype(np.float32)
+    scene = Scene.from_triangles(tris)
+    rays = _rays_at([[0.3, 0.1, 0.2], [0.35, 0.1, 0.2], [1.0, 0.0, 0.0]])
+    rec = _assert_all_backends_agree(scene, rays)
+    assert not np.asarray(rec.hit).any(), "degenerate triangle was hit"
+    assert (np.asarray(rec.tri_index) == -1).all()
+    assert np.isinf(np.asarray(rec.t)).all()
+
+
+def test_degenerate_triangles_mixed_with_real_ones():
+    """Degenerate triangles sharing a BVH with real ones must not mask or
+    corrupt hits on the real geometry."""
+    rng = np.random.default_rng(5)
+    ctr = rng.uniform(-1, 1, (29, 3)).astype(np.float32)
+    d1 = rng.normal(scale=0.2, size=(29, 3)).astype(np.float32)
+    d2 = rng.normal(scale=0.2, size=(29, 3)).astype(np.float32)
+    real = np.stack([ctr, ctr + d1, ctr + d2], axis=1)
+    degen = np.repeat(ctr[:7, None, :], 3, axis=1)  # point triangles
+    both = np.concatenate([real, degen]).astype(np.float32)
+
+    scene_real = Scene.from_triangles(real)
+    scene_both = Scene.from_triangles(both)
+    org = rng.uniform(-3, -2, (16, 3)).astype(np.float32)
+    tgt = rng.uniform(-0.5, 0.5, (16, 3)).astype(np.float32)
+    rays = make_ray(jnp.asarray(org), jnp.asarray(tgt - org))
+
+    rec_b = _assert_all_backends_agree(scene_both, rays)
+    rec_r = trace_rays(scene_real.bvh, rays, scene_real.depth)
+    np.testing.assert_array_equal(np.asarray(rec_b.t), np.asarray(rec_r.t))
+    np.testing.assert_array_equal(np.asarray(rec_b.tri_index),
+                                  np.asarray(rec_r.tri_index))
+
+
+# ---------------------------------------------------------------------------
+# axis-aligned rays on exact box faces
+# ---------------------------------------------------------------------------
+
+
+def _axis_quad(x=1.0, half=1.0):
+    """Two triangles spanning the square x == x0, |y|,|z| <= half, wound so
+    the normal faces -x (the datapath backface-culls; rays travel +x)."""
+    c = np.asarray([[x, -half, -half], [x, half, -half],
+                    [x, half, half], [x, -half, half]], np.float32)
+    return np.stack([np.stack([c[0], c[2], c[1]]),
+                     np.stack([c[0], c[3], c[2]])])
+
+
+def test_axis_aligned_rays_exact_face_hits():
+    """Rays along +x with zero y/z direction (inv = ±inf lanes) against an
+    axis-aligned quad: interior hits land at exactly t = distance, and
+    every backend agrees on the boundary rays that graze the AABB face."""
+    scene = Scene.from_triangles(_axis_quad(x=1.0))
+    targets = [
+        [1.0, 0.0, 0.0],  # interior
+        [1.0, 0.25, -0.5],  # interior, off-center
+        [1.0, 1.0, 0.0],  # exactly on the quad's +y edge
+        [1.0, -1.0, -1.0],  # exactly on a corner
+        [1.0, 1.5, 0.0],  # outside, same plane
+    ]
+    org = np.asarray([[0.0, t[1], t[2]] for t in targets], np.float32)
+    rays = make_ray(jnp.asarray(org),
+                    jnp.asarray(np.tile([[1.0, 0.0, 0.0]], (5, 1)),
+                                jnp.float32))
+    rec = _assert_all_backends_agree(scene, rays)
+    hit = np.asarray(rec.hit)
+    assert hit[0] and hit[1], "interior axis-aligned hits missed"
+    assert not hit[4], "ray outside the quad reported a hit"
+    # interior hits are exact: origin x=0, plane x=1, direction (1,0,0)
+    np.testing.assert_array_equal(np.asarray(rec.t)[:2],
+                                  np.ones(2, np.float32))
+
+
+def test_axis_aligned_ray_parallel_to_face_plane():
+    """A ray sliding exactly *in* the quad's plane (direction +y at x == 1)
+    never produces a NaN-poisoned record, and all backends agree."""
+    scene = Scene.from_triangles(_axis_quad(x=1.0))
+    org = np.asarray([[1.0, -3.0, 0.0], [0.5, -3.0, 0.0]], np.float32)
+    dirs = np.tile([[0.0, 1.0, 0.0]], (2, 1)).astype(np.float32)
+    rays = make_ray(jnp.asarray(org), jnp.asarray(dirs))
+    rec = _assert_all_backends_agree(scene, rays)
+    t = np.asarray(rec.t)
+    assert not np.isnan(t).any(), "NaN leaked out of a parallel-ray trace"
+    assert not np.asarray(rec.hit)[1], "ray off the plane hit the quad"
+
+
+# ---------------------------------------------------------------------------
+# t_min == extent shadow rays
+# ---------------------------------------------------------------------------
+
+
+def test_shadow_ray_collapsed_acceptance_window():
+    """Shadow rays whose [t_min, extent] window collapses to the exact hit
+    distance: both comparisons are inclusive, so t == t_min == extent is
+    still occluded; shrinking either bound by one ulp clears it."""
+    scene = Scene.from_triangles(_axis_quad(x=2.0))
+    org = jnp.asarray([[0.0, 0.0, 0.0]], jnp.float32)
+    d = jnp.asarray([[1.0, 0.0, 0.0]], jnp.float32)
+    t_hit = float(scene.engine(shard=1).trace(make_ray(org, d)).t[0])
+    assert t_hit == 2.0  # exact: axis-aligned plane at x=2 from x=0
+
+    engine = scene.engine(pad_multiple=8, shard=1)
+    below = float(np.nextafter(np.float32(t_hit), np.float32(0)))
+    above = float(np.nextafter(np.float32(t_hit), np.float32(4)))
+
+    def occluded(extent, t_min):
+        rays = make_ray(org, d, extent=jnp.asarray([extent], jnp.float32))
+        got = bool(engine.occluded(rays, t_min=t_min)[0])
+        ref = bool(trace_wavefront(scene.bvh, rays, scene.depth,
+                                   ray_type="shadow", t_min=t_min).hit[0])
+        assert got == ref, f"engine/free-fn disagree at {extent=} {t_min=}"
+        return got
+
+    assert occluded(extent=t_hit, t_min=t_hit)  # window == {t_hit}
+    assert not occluded(extent=below, t_min=below)  # window below the hit
+    assert not occluded(extent=above, t_min=above)  # window above the hit
+    assert occluded(extent=above, t_min=below)  # window straddles the hit
+    # and an empty window (t_min > extent) can never be occluded
+    assert not occluded(extent=below, t_min=above)
+
+
+# ---------------------------------------------------------------------------
+# minimal trees: single triangle, root-is-leaf-parent
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_tri", [1, 2, 3, 4])
+def test_single_node_bvh_all_backends(n_tri):
+    """Soups small enough that the whole tree is one internal node (the
+    root) over <= 4 leaves; padded leaves (tri_index == -1) must never be
+    reported as hits."""
+    rng = np.random.default_rng(n_tri)
+    ctr = rng.uniform(-0.5, 0.5, (n_tri, 3)).astype(np.float32)
+    d1 = rng.normal(scale=0.4, size=(n_tri, 3)).astype(np.float32)
+    d2 = rng.normal(scale=0.4, size=(n_tri, 3)).astype(np.float32)
+    tris = np.stack([ctr, ctr + d1, ctr + d2], axis=1).astype(np.float32)
+    scene = Scene.from_triangles(tris)
+    assert scene.depth == 1  # root is already the leaf parent
+
+    org = rng.uniform(-3, -2, (12, 3)).astype(np.float32)
+    tgt = rng.uniform(-0.5, 0.5, (12, 3)).astype(np.float32)
+    rays = make_ray(jnp.asarray(org), jnp.asarray(tgt - org))
+    rec = _assert_all_backends_agree(scene, rays)
+    tri_idx = np.asarray(rec.tri_index)
+    assert (tri_idx < n_tri).all(), "hit a padded (nonexistent) leaf"
+    assert ((tri_idx >= 0) == np.asarray(rec.hit)).all()
+    # with one internal node, every ray issues exactly one quadbox job
+    np.testing.assert_array_equal(np.asarray(rec.quadbox_jobs),
+                                  np.ones(12, np.int32))
+
+
+def test_single_triangle_direct_hit_and_miss():
+    # wound so the normal faces -x (rays come from x < 0; backface culling)
+    tri = np.asarray([[[0.0, -1.0, -1.0], [0.0, 0.0, 1.0],
+                       [0.0, 1.0, -1.0]]], np.float32)
+    scene = Scene.from_triangles(tri)
+    rays = _rays_at([[0.0, 0.0, 0.0], [0.0, 5.0, 5.0]],
+                    origin=(-2.0, 0.0, 0.0))
+    rec = _assert_all_backends_agree(scene, rays)
+    hit = np.asarray(rec.hit)
+    assert hit[0] and not hit[1]
+    assert np.asarray(rec.tri_index)[0] == 0

@@ -135,6 +135,8 @@ def test_auto_backend_policy():
     assert engine.resolve_trace_backend("closest", 4, t_min=1e-3) == "wavefront"
     assert engine.resolve_trace_backend("closest", 4,
                                         max_rounds=2) == "wavefront"
+    # ...and so does any sharded batch (a multi-device frontier is not tiny)
+    assert engine.resolve_trace_backend("closest", 4, shards=2) == "wavefront"
     small = jax.tree_util.tree_map(lambda x: x[:4], rays)
     rec = engine.trace(small, t_min=1e-3)  # auto: must not hit per_ray
     assert rec.t.shape == (4,)
@@ -143,7 +145,8 @@ def test_auto_backend_policy():
     assert engine.resolve_distance_backend() == (
         "pallas" if jax.default_backend() == "tpu" else "mxu")
     # an engine-wide default backend overrides the auto policy...
-    forced = scene.engine(backend="wavefront")
+    # (shard=1 pins the single-device policy whatever mesh the host has)
+    forced = scene.engine(backend="wavefront", shard=1)
     forced.trace(small)
     assert all(key[1] == "wavefront" for key in forced._cache)
     # ...and a per-call backend="auto" re-enables it
@@ -158,7 +161,10 @@ def test_auto_backend_policy():
 
 def test_same_shape_query_hits_compiled_cache():
     scene, rays = _scene_and_rays(7, 230, 64)
-    engine = scene.engine(pad_multiple=8)
+    # shard=1: this test pins the *single-device* pad-bucket policy (under
+    # auto-sharding the shard rounding merges more shapes into one bucket,
+    # which tests/test_dispatch.py covers)
+    engine = scene.engine(pad_multiple=8, shard=1)
     first = engine.trace(rays)
     assert engine.cache_info().misses == 1
     # second same-shape call: engine cache hit AND zero new jit traces
@@ -285,17 +291,97 @@ def test_distance_padded_roundtrip_identity():
 
 
 def test_empty_batches_return_empty_results():
-    """Zero-row queries pad with a zero dummy lane and slice back to
-    empty — the legacy free functions accept them, so the engine must."""
+    """Zero-row queries short-circuit to typed empty results: correct
+    shapes and dtypes, nothing compiled or executed (the old path padded
+    a dummy lane and paid a full compile for a no-op query)."""
     q, db = _vectors()
     engine = VectorIndex.from_database(db).engine(pad_multiple=8)
     res = engine.nearest(q[:0], 4)
     assert res.scores.shape == (0, 4) and res.indices.shape == (0, 4)
-    assert engine.count_within(q[:0], 5.0).shape == (0,)
+    assert res.scores.dtype == jnp.float32
+    assert res.indices.dtype == jnp.int32
+    counts = engine.count_within(q[:0], 5.0)
+    assert counts.shape == (0,) and counts.dtype == jnp.int32
+    w = engine.within(q[:0], 5.0, 3)
+    assert w.within.shape == (0, 3) and w.within.dtype == bool
+    assert engine.scores(q[:0]).shape == (0, db.shape[0])
+    assert engine.cache_info().entries == 0, "empty query compiled something"
+    # validation still fires before the empty short-circuit
+    with pytest.raises(ValueError, match="unknown distance backend"):
+        engine.nearest(q[:0], 4, backend="warp")
+
     scene, rays = _scene_and_rays(11, 100, 8)
     empty = jax.tree_util.tree_map(lambda x: x[:0], rays)
-    rec = scene.engine(pad_multiple=8).trace(empty)
+    tre = scene.engine(pad_multiple=8)
+    rec = tre.trace(empty)
     assert rec.t.shape == (0,) and rec.tri_index.shape == (0,)
+    assert rec.hit.dtype == bool and rec.quadbox_jobs.dtype == jnp.int32
+    assert int(rec.rounds) == 0
+    assert tre.cache_info().entries == 0, "empty trace compiled something"
+    assert tre.occluded(empty).shape == (0,)
+    with pytest.raises(ValueError, match="ray_type"):
+        tre.trace(empty, ray_type="refracted")
+
+
+# ---------------------------------------------------------------------------
+# sharding / chunking knobs (single-device semantics; the sharded paths are
+# fuzzed on an 8-device mesh in test_fuzz_backends.py / test_dispatch.py)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("ray_type", ["closest", "any", "shadow"])
+def test_chunked_trace_is_bit_identical(ray_type):
+    """chunk_size microbatching returns exactly the one-shot results,
+    including the batch round counter, through ONE compiled entry."""
+    scene, rays = _scene_and_rays(7, 230, 50)
+    ref = scene.engine(pad_multiple=8, shard=1).trace(
+        rays, ray_type=ray_type, backend="wavefront")
+    chunked = scene.engine(pad_multiple=8, shard=1, chunk_size=16)
+    got = chunked.trace(rays, ray_type=ray_type, backend="wavefront")
+    for field in TRACE_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(got, field)),
+                                      np.asarray(getattr(ref, field)),
+                                      err_msg=field)
+    assert int(got.rounds) == int(ref.rounds)
+    # 50 rays in 16-row blocks = 4 chunked calls, one compiled function
+    assert chunked.cache_info() == (0, 1, 1)
+    with jtu.count_jit_tracing_cache_miss() as count:
+        chunked.trace(rays, ray_type=ray_type, backend="wavefront")
+    assert count[0] == 0, "chunked re-query retraced its compiled function"
+
+
+def test_chunked_distance_is_bit_identical():
+    q, db = _vectors()  # 17 queries
+    index = VectorIndex.from_database(db)
+    ref = index.engine(pad_multiple=8, shard=1)
+    chunked = index.engine(pad_multiple=8, shard=1, chunk_size=4)
+    for metric in ("euclidean", "angular", "cosine"):
+        a = ref.nearest(q, 5, metric)
+        b = chunked.nearest(q, 5, metric)
+        np.testing.assert_array_equal(np.asarray(a.scores),
+                                      np.asarray(b.scores), err_msg=metric)
+        np.testing.assert_array_equal(np.asarray(a.indices),
+                                      np.asarray(b.indices), err_msg=metric)
+    np.testing.assert_array_equal(
+        np.asarray(ref.count_within(q, 5.0)),
+        np.asarray(chunked.count_within(q, 5.0)))
+    # per-call override beats the engine default
+    np.testing.assert_array_equal(
+        np.asarray(ref.scores(q)), np.asarray(chunked.scores(q, chunk_size=7)))
+
+
+def test_shard_and_chunk_validation():
+    scene, rays = _scene_and_rays(11, 100, 8)
+    engine = scene.engine()
+    with pytest.raises(ValueError, match="exceeds"):
+        engine.trace(rays, shard=jax.local_device_count() + 1)
+    with pytest.raises(ValueError, match="shard"):
+        engine.trace(rays, shard=0)
+    with pytest.raises(ValueError, match="chunk_size"):
+        engine.trace(rays, chunk_size=0)
+    # shard=1 / shard="auto" always valid, whatever the host mesh
+    engine.trace(rays, shard=1)
+    engine.trace(rays, shard="auto")
 
 
 def test_similarity_matches_cosine():
@@ -358,3 +444,29 @@ def test_serving_engine_rejects_overlong_prompt():
     eng = Engine(cfg=None, params=None, max_len=8)  # cfg unused pre-check
     with pytest.raises(ValueError, match="max_len"):
         eng.generate(jnp.zeros((1, 6), jnp.int32), max_new_tokens=4)
+    with pytest.raises(ValueError, match="batch_chunk"):
+        Engine(cfg=None, params=None, batch_chunk=0)
+
+
+def test_serving_engine_batch_chunk_matches_unchunked():
+    """batch_chunk microbatching (the serving twin of the query layer's
+    chunk_size) returns the same tokens as the one-shot batch, and empty
+    request batches short-circuit."""
+    from repro.configs import get_smoke
+    from repro.models import init_params
+    from repro.serving import Engine
+    cfg = get_smoke("smollm-360m")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (5, 8)), jnp.int32)
+    ref = Engine(cfg, params, max_len=16).generate(toks, max_new_tokens=4)
+    chunked = Engine(cfg, params, max_len=16, batch_chunk=2)
+    got = chunked.generate(toks, max_new_tokens=4)  # 2 + 2 + 1(pad to 2)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    assert chunked.generate(toks[:0], max_new_tokens=4).shape == (0, 4)
+    # sampled decode folds the chunk offset into rng: identical prompts in
+    # different chunks must not draw identical "random" continuations
+    same = jnp.broadcast_to(toks[:1], (4, toks.shape[1]))
+    sampled = chunked.generate(same, max_new_tokens=4, temperature=1.0,
+                               rng=jax.random.PRNGKey(7))
+    assert not np.array_equal(np.asarray(sampled[0]), np.asarray(sampled[2]))
