@@ -1,0 +1,95 @@
+"""Acceleration-structure builder benchmark: quality as a measured knob.
+
+For each registered builder (``core/build``) on a clustered (non-uniform)
+scene — the workload class where tree quality actually matters — one row
+reports:
+
+* ``build`` time (compiled steady state: the builders are jittable, so
+  the second call is the per-frame rebuild cost),
+* the model quality (``sah_cost``) and the measured quality (mean
+  OpQuadbox / OpTriangle jobs per ray on a shared probe batch — the
+  deterministic, device-free metric every engine bit-agrees on),
+* end-to-end wavefront trace latency for the same rays on that tree.
+
+A final row measures ``refit`` (the dynamic-scene path): the O(depth)
+AABB re-sweep that ``Scene.refit`` runs per animation frame, orders of
+magnitude under any rebuild, plus the refit tree's measured job quality
+after one frame of motion.
+
+All rows land in ``BENCH_quick.json`` via ``benchmarks.run --json``, so
+the SAH-vs-LBVH margin is tracked across PRs.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import Scene, Triangle, make_ray
+from repro.core import build, builders, refit, sah_cost, tree_stats
+from repro.core.build import clustered_soup
+
+
+def _timed(fn, *args):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    out = fn(*args)
+    jax.block_until_ready(out)
+    return out, time.perf_counter() - t0
+
+
+def run(rows):
+    rng = np.random.default_rng(0)
+    tri = clustered_soup(rng, n_clusters=12, per_cluster=250)
+    n_tri = int(tri.a.shape[0])
+
+    n_rays = 512
+    org = rng.uniform(-7, -6, (n_rays, 3)).astype(np.float32)
+    tgt = rng.uniform(-4, 4, (n_rays, 3)).astype(np.float32)
+    rays = make_ray(jnp.asarray(org), jnp.asarray(tgt - org))
+
+    jobs = {}
+    for name in builders():
+        build_jit = jax.jit(lambda t, b=name: build(t, b).bvh)
+        bvh, dt_build = _timed(build_jit, tri)
+
+        scene = Scene.from_triangles(tri, builder=name)
+        engine = scene.engine(shard=1)
+        rec, dt_trace = _timed(
+            lambda r: engine.trace(r, backend="wavefront"), rays)
+
+        st = tree_stats(bvh, name, rays=rays)
+        jobs[name] = st.mean_jobs
+        rows.append((
+            f"build_{name}_{n_tri // 1000}k_clustered",
+            dt_build * 1e6,
+            f"sah_cost={st.sah_cost:.2f};"
+            f"mean_quadbox_jobs={st.mean_quadbox_jobs:.2f};"
+            f"mean_tri_jobs={st.mean_triangle_jobs:.2f};"
+            f"mean_jobs={st.mean_jobs:.2f};"
+            f"occupancy={st.occupancy:.3f};"
+            f"trace_us_per_ray={dt_trace / n_rays * 1e6:.3f};"
+            f"batched_rounds={int(rec.rounds)}"))
+
+    if "lbvh" in jobs and "sah" in jobs:
+        rows.append((
+            "build_quality_sah_vs_lbvh", 0.0,
+            f"jobs_ratio={jobs['sah'] / jobs['lbvh']:.3f};"
+            f"jobs_saved_per_ray={jobs['lbvh'] - jobs['sah']:.2f}"))
+
+    # refit: the per-frame dynamic-scene cost (topology kept, boxes
+    # re-swept) vs the full rebuild above
+    bvh = build(tri, "sah").bvh
+    shift = jnp.asarray(
+        rng.normal(scale=0.05, size=(n_tri, 3)).astype(np.float32))
+    moved = Triangle(tri.a + shift, tri.b + shift, tri.c + shift)
+    refit_jit = jax.jit(refit)
+    re, dt_refit = _timed(refit_jit, bvh, moved)
+    rows.append((
+        f"refit_sah_{n_tri // 1000}k_clustered", dt_refit * 1e6,
+        f"sah_cost={sah_cost(re):.2f};"
+        f"mean_jobs={tree_stats(re, 'sah', rays=rays).mean_jobs:.2f};"
+        "topology=preserved"))

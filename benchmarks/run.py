@@ -62,11 +62,12 @@ def main():
                     help="also write the rows as machine-readable JSON")
     args = ap.parse_args()
 
-    from . import bench_datapath, bench_knn, bench_traversal
+    from . import bench_build, bench_datapath, bench_knn, bench_traversal
 
     rows: list[tuple] = []
     bench_datapath.run(rows)
     bench_traversal.run(rows)
+    bench_build.run(rows)
     bench_knn.run(rows)
     if not args.quick:
         from . import bench_models

@@ -4,10 +4,13 @@ Build a session once, query it everywhere (DESIGN.md §5):
 
     from repro.api import Scene, VectorIndex, make_ray
 
-    scene = Scene.from_triangles(vertices)        # (N, 3, 3) or Triangle
+    scene = Scene.from_triangles(vertices, builder="sah")  # or "lbvh"
     engine = scene.engine()
     hits = engine.trace(rays)                     # closest-hit
     shadowed = engine.trace(rays, ray_type="shadow").hit
+    scene.refit(moved_vertices)                   # animate: no rebuild,
+    hits = engine.trace(rays)                     # no retrace (DESIGN §7)
+    print(scene.stats())                          # SAH cost + jobs/ray
 
     index = VectorIndex.from_database(embeddings)
     engine = index.engine()
@@ -26,6 +29,13 @@ stream bigger-than-memory batches through fixed-size microbatches::
     engine = scene.engine(shard="auto", chunk_size=65536)
     hits = engine.trace(million_rays)        # sharded + chunked, bit-equal
 """
+from .core.build import (  # noqa: F401
+    BuildResult,
+    TreeStats,
+    builders,
+    refit,
+    register_builder,
+)
 from .core.session import (  # noqa: F401
     CacheInfo,
     NearestResult,
@@ -45,6 +55,7 @@ from .core.wavefront import RAY_TYPES, SHADOW_T_MIN  # noqa: F401
 
 __all__ = [
     "Box",
+    "BuildResult",
     "CacheInfo",
     "NearestResult",
     "QueryEngine",
@@ -53,12 +64,16 @@ __all__ = [
     "SHADOW_T_MIN",
     "Scene",
     "TraceResult",
+    "TreeStats",
     "Triangle",
     "VectorIndex",
     "WithinResult",
+    "builders",
     "default_pad_multiple",
     "distance_backends",
     "make_ray",
+    "refit",
+    "register_builder",
     "register_distance_backend",
     "register_trace_backend",
     "trace_backends",

@@ -32,13 +32,26 @@ from .datapath import (  # noqa: F401
     ray_triangle_test,
 )
 from .stream import DatapathJob, DatapathOutput, make_jobs, unified_stream  # noqa: F401
-from .bvh import BVH4, build_bvh4, bvh4_depth, child_boxes  # noqa: F401
+from .bvh import BVH4, bvh4_depth, child_boxes, fit_nodes  # noqa: F401
 from .traversal import HitRecord, trace_ray, trace_rays  # noqa: F401
 from .wavefront import (  # noqa: F401
     RAY_TYPES,
     WavefrontRecord,
     occlusion_test,
     trace_wavefront,
+)
+from .build import (  # noqa: F401
+    BuildResult,
+    TreeStats,
+    build,
+    build_bvh4,
+    builders,
+    get_builder,
+    mean_jobs_per_ray,
+    refit,
+    register_builder,
+    sah_cost,
+    tree_stats,
 )
 from .knn import (  # noqa: F401
     angular_scores,

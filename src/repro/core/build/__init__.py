@@ -1,0 +1,109 @@
+"""Acceleration-structure construction subsystem (DESIGN.md §7).
+
+The datapath is only half a ray tracer — what it chews on is the
+acceleration structure, and tree quality is a workload trade-off (RTNN),
+while build *and* update are first-class API surface alongside trace
+(CrossRT).  This package is the layer between geometry and the datapath:
+
+* a **builder registry** mirroring the session layer's backend registry
+  (:func:`register_builder`, names ``"lbvh" | "sah"``) with a shared
+  :class:`BuildResult` record;
+* :mod:`~repro.core.build.lbvh` — the Morton-order LBVH builder (fast,
+  quality-agnostic), refactored out of ``core/bvh.py``;
+* :mod:`~repro.core.build.sah` — a pure-JAX, jittable binned-SAH top-down
+  builder (4-wide via two levels of binary splits per tree level);
+* :mod:`~repro.core.build.refit` — O(depth) topology-preserving AABB
+  refit for dynamic scenes (``Scene.refit``: zero retraces per frame);
+* :mod:`~repro.core.build.quality` — SAH cost + measured mean datapath
+  jobs/ray, the portable tree-quality metrics behind ``Scene.stats()``.
+
+Every builder emits the *same* implicit :class:`~repro.core.bvh.BVH4`
+layout, so every traversal engine, backend, sharding knob and Pallas
+kernel consumes any builder's tree unchanged — quality becomes a knob,
+not a fork.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+from ..bvh import BVH4, bvh4_depth
+from ..types import Triangle
+
+# name -> builder(tri: Triangle, depth: int) -> BVH4 (jittable, static depth)
+_BUILDERS: dict[str, Callable] = {}
+
+
+class BuildResult(NamedTuple):
+    """What every registered builder hands the session layer."""
+
+    bvh: BVH4
+    builder: str  # registry name that produced the tree
+    depth: int  # static tree depth (4**depth leaf slots)
+
+
+def register_builder(name: str):
+    """Register an acceleration-structure builder under ``name``.  The
+    builder receives ``(triangles, depth)`` with a static depth and must
+    return a :class:`BVH4` in the shared implicit layout."""
+    def deco(fn):
+        _BUILDERS[name] = fn
+        return fn
+    return deco
+
+
+def builders() -> tuple[str, ...]:
+    return tuple(_BUILDERS)
+
+
+def get_builder(name: str) -> Callable:
+    if name not in _BUILDERS:
+        raise ValueError(
+            f"unknown builder {name!r} (registered: {builders()})")
+    return _BUILDERS[name]
+
+
+def build(triangles: Triangle, builder: str = "lbvh",
+          depth: int | None = None) -> BuildResult:
+    """Build an acceleration structure with a registered builder.
+
+    ``depth`` must be static; it defaults to the smallest depth whose
+    ``4**depth`` leaf slots fit the soup.
+    """
+    fn = get_builder(builder)
+    n = triangles.a.shape[0]
+    if depth is None:
+        depth = bvh4_depth(n)
+    if 4**depth < n:
+        raise ValueError(
+            f"depth={depth} gives {4**depth} leaf slots < {n} triangles")
+    return BuildResult(bvh=fn(triangles, depth), builder=builder, depth=depth)
+
+
+# builder modules self-register on import (like the session backends)
+from . import lbvh, sah  # noqa: E402,F401
+from .lbvh import build_bvh4  # noqa: E402,F401  (legacy name, re-exported)
+from .quality import (  # noqa: E402,F401
+    TreeStats,
+    clustered_soup,
+    mean_jobs_per_ray,
+    probe_rays,
+    sah_cost,
+    tree_stats,
+)
+from .refit import refit  # noqa: E402,F401
+
+__all__ = [
+    "BuildResult",
+    "TreeStats",
+    "build",
+    "build_bvh4",
+    "builders",
+    "clustered_soup",
+    "get_builder",
+    "mean_jobs_per_ray",
+    "probe_rays",
+    "refit",
+    "register_builder",
+    "sah_cost",
+    "tree_stats",
+]

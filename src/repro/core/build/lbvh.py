@@ -1,0 +1,70 @@
+"""LBVH -> BVH4: the Morton-order builder, pure JAX.
+
+The fast, quality-agnostic baseline (Lauterbach-style LBVH):
+
+1. Morton-code the triangle centroids (30-bit, 10 bits/axis).
+2. Sort primitives along the Z-order curve (``jnp.argsort`` -- a radix sort
+   on TPU).
+3. Lay the sorted leaves into the implicit complete 4-ary tree and fit
+   AABBs bottom-up with ``depth`` fully-vectorised reduction sweeps
+   (:func:`repro.core.bvh.fit_nodes`).
+
+Spatial locality comes entirely from the Z-order curve, so clustered
+(non-uniform) soups pay for it in traversal jobs — that trade-off is what
+:mod:`repro.core.build.sah` exists to buy back, and what
+``benchmarks/bench_build.py`` measures.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..bvh import BVH4, bvh4_depth, fit_nodes, leaf_arrays, nondegenerate_mask
+from ..types import Triangle, aabb_of_triangles
+from . import register_builder
+
+
+def _expand_bits(v: jax.Array) -> jax.Array:
+    """Spread the low 10 bits of v so there are 2 zero bits between each."""
+    u = jnp.uint32
+    v = (v * u(0x00010001)) & u(0xFF0000FF)
+    v = (v * u(0x00000101)) & u(0x0F00F00F)
+    v = (v * u(0x00000011)) & u(0xC30C30C3)
+    v = (v * u(0x00000005)) & u(0x49249249)
+    return v
+
+
+def morton3d(points01: jax.Array) -> jax.Array:
+    """30-bit Morton codes for points in [0, 1]^3.  points01: (N, 3)."""
+    scaled = jnp.clip(points01 * 1024.0, 0.0, 1023.0).astype(jnp.uint32)
+    x = _expand_bits(scaled[:, 0])
+    y = _expand_bits(scaled[:, 1])
+    z = _expand_bits(scaled[:, 2])
+    return (x << 2) | (y << 1) | z
+
+
+@register_builder("lbvh")
+def build_bvh4(tri: Triangle, depth: int | None = None) -> BVH4:
+    """Build a BVH4 over a triangle soup.  ``depth`` must be static if given."""
+    n = tri.a.shape[0]
+    if depth is None:
+        depth = bvh4_depth(n)
+    n_leaves = 4**depth
+
+    boxes = aabb_of_triangles(tri)
+    centroid = 0.5 * (boxes.lo + boxes.hi)
+    scene_lo = jnp.min(boxes.lo, axis=0)
+    scene_hi = jnp.max(boxes.hi, axis=0)
+    extent = jnp.maximum(scene_hi - scene_lo, 1e-12)
+    codes = morton3d((centroid - scene_lo) / extent)
+
+    order = jnp.argsort(codes).astype(jnp.int32)  # (N,)
+    pad = n_leaves - n
+    leaf_perm = jnp.concatenate([order, jnp.full((pad,), -1, jnp.int32)])
+    # degenerate cull: zero-area triangles become padded leaves (tri -1,
+    # inverted box) so no engine can ever report them as hits
+    leaf_tri, leaf_lo, leaf_hi = leaf_arrays(leaf_perm, boxes,
+                                             nondegenerate_mask(tri))
+    node_lo, node_hi = fit_nodes(leaf_lo, leaf_hi, depth)
+    return BVH4(node_lo=node_lo, node_hi=node_hi, leaf_tri=leaf_tri,
+                triangles=tri, leaf_perm=leaf_perm)

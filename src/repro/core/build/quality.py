@@ -1,0 +1,136 @@
+"""Tree-quality metrics: SAH cost + measured datapath jobs per ray.
+
+Two complementary lenses on the same question — "how much datapath work
+does this tree cost per query?":
+
+* :func:`sah_cost` is the *model*: the classic Surface Area Heuristic
+  expectation (box-test and triangle-test terms weighted by surface area
+  relative to the root), computable from the tree alone in O(nodes).
+* :func:`mean_jobs_per_ray` is the *measurement*: trace a probe batch and
+  read back the per-ray ``quadbox_jobs`` / ``triangle_jobs`` counters the
+  engines already maintain.  Deterministic, device-free (integer job
+  counts, bit-identical across backends and shardings by the DESIGN.md §5
+  contract) — which is exactly why it is the portable quality metric this
+  repo optimises for, rather than wall-clock on whatever host CI lands on.
+
+``Scene.stats()`` surfaces both as a :class:`TreeStats` record, and
+``benchmarks/bench_build.py`` tracks them per builder across PRs.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..bvh import BVH4, depth_of, level_offset
+from ..types import Ray, Triangle, make_ray
+from ..wavefront import trace_wavefront
+from .sah import _half_area
+
+
+class TreeStats(NamedTuple):
+    """One builder's tree, summarised (``Scene.stats()``)."""
+
+    builder: str
+    n_triangles: int
+    depth: int
+    n_nodes: int
+    n_leaves: int
+    occupancy: float  # occupied fraction of the 4**depth leaf slots
+    sah_cost: float  # model: SAH expectation relative to the root box
+    mean_quadbox_jobs: float  # measured: OpQuadbox jobs per probe ray
+    mean_triangle_jobs: float  # measured: OpTriangle jobs per probe ray
+    mean_jobs: float  # the headline number: quadbox + triangle
+
+
+def sah_cost(bvh: BVH4, c_box: float = 1.0, c_tri: float = 1.0) -> float:
+    """SAH expected traversal cost of the tree.
+
+    ``sum_internal c_box * A(n) / A(root) + sum_leaf c_tri * A(l) / A(root)``
+    with empty (inverted-box) nodes contributing zero.  Leaves hold one
+    triangle each in this layout, so the triangle term needs no
+    primitive-count weight.
+    """
+    depth = depth_of(bvh)
+    leaf_start = level_offset(depth)
+    area = _half_area(bvh.node_lo, bvh.node_hi)
+    valid = jnp.all(bvh.node_hi >= bvh.node_lo, axis=-1)
+    area = jnp.where(valid, area, 0.0)
+    root_area = jnp.maximum(area[0], 1e-30)
+    occupied = bvh.leaf_tri >= 0
+    cost = (c_box * jnp.sum(area[:leaf_start])
+            + c_tri * jnp.sum(area[leaf_start:] * occupied)) / root_area
+    return float(cost)
+
+
+def clustered_soup(rng, n_clusters: int = 8, per_cluster: int = 40):
+    """The canonical non-uniform quality workload: tight triangle clusters
+    flung across a wide volume, where Z-order leaf runs straddle clusters
+    and SAH splits pay off.  One definition, so the margin
+    ``tests/test_build.py`` asserts and the margin
+    ``benchmarks/bench_build.py`` reports measure the same scene family."""
+    centers = rng.uniform(-4, 4, (n_clusters, 3)).astype(np.float32)
+    ctr = (np.repeat(centers, per_cluster, axis=0)
+           + rng.normal(scale=0.06, size=(n_clusters * per_cluster, 3))
+           ).astype(np.float32)
+    d1 = rng.normal(scale=0.03, size=ctr.shape).astype(np.float32)
+    d2 = rng.normal(scale=0.03, size=ctr.shape).astype(np.float32)
+    return Triangle(a=jnp.asarray(ctr), b=jnp.asarray(ctr + d1),
+                    c=jnp.asarray(ctr + d2))
+
+
+def probe_rays(bvh: BVH4, n: int = 256, seed: int = 0) -> Ray:
+    """A deterministic probe batch for job measurement: origins on a
+    sphere outside the scene box, aimed at points inside it — every probe
+    enters the tree, so the counters measure traversal, not misses."""
+    rng = np.random.default_rng(seed)
+    lo = np.asarray(bvh.node_lo[0])
+    hi = np.asarray(bvh.node_hi[0])
+    center = 0.5 * (lo + hi)
+    radius = 1.25 * float(np.linalg.norm(hi - lo)) + 1e-3
+    d = rng.normal(size=(n, 3)).astype(np.float32)
+    d /= np.maximum(np.linalg.norm(d, axis=1, keepdims=True), 1e-12)
+    org = (center + radius * d).astype(np.float32)
+    tgt = rng.uniform(lo, hi, (n, 3)).astype(np.float32)
+    return make_ray(jnp.asarray(org), jnp.asarray(tgt - org))
+
+
+@jax.jit
+def _probe_trace(bvh: BVH4, rays: Ray):
+    rec = trace_wavefront(bvh, rays, depth_of(bvh))
+    return rec.quadbox_jobs, rec.triangle_jobs
+
+
+def mean_jobs_per_ray(bvh: BVH4, rays: Ray | None = None,
+                      probes: int = 256) -> tuple[float, float]:
+    """Measured (mean OpQuadbox, mean OpTriangle) jobs per ray — the
+    deterministic tree-quality metric.  Uses :func:`probe_rays` when no
+    ray batch is given."""
+    if rays is None:
+        rays = probe_rays(bvh, probes)
+    qb, tr = _probe_trace(bvh, rays)
+    return float(jnp.mean(qb.astype(jnp.float32))), \
+        float(jnp.mean(tr.astype(jnp.float32)))
+
+
+def tree_stats(bvh: BVH4, builder: str = "?", rays: Ray | None = None,
+               probes: int = 256) -> TreeStats:
+    """Everything :class:`TreeStats` reports, from one tree."""
+    depth = depth_of(bvh)
+    n_leaves = int(bvh.leaf_tri.shape[0])
+    occupied = int(jnp.sum(bvh.leaf_tri >= 0))
+    qb, tr = mean_jobs_per_ray(bvh, rays, probes)
+    return TreeStats(
+        builder=builder,
+        n_triangles=int(bvh.triangles.a.shape[0]),
+        depth=depth,
+        n_nodes=int(bvh.node_lo.shape[0]),
+        n_leaves=n_leaves,
+        occupancy=occupied / n_leaves,
+        sah_cost=sah_cost(bvh),
+        mean_quadbox_jobs=qb,
+        mean_triangle_jobs=tr,
+        mean_jobs=qb + tr,
+    )

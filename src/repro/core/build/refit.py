@@ -1,0 +1,53 @@
+"""Refit: O(depth) AABB update for dynamic scenes, topology preserved.
+
+Animating a scene by rebuilding pays the full builder (a sort or a SAH
+sweep) *and* — far worse for a jitted pipeline — a fresh tree means fresh
+constants unless the engine threads the BVH as a runtime argument.  Refit
+is the classic cheap alternative (CrossRT's ``update`` verb): keep the
+triangle-to-leaf assignment exactly as built and re-sweep only the AABBs
+bottom-up — ``depth`` vectorised 4-to-1 reductions, the same
+:func:`~repro.core.bvh.fit_nodes` every builder ends with.
+
+Because the leaf permutation, array shapes and static depth are all
+unchanged, a refit BVH4 is *pytree-compatible* with its build: every
+compiled trace re-enters the existing jit cache with **zero retracing**
+(``Scene.refit``; asserted by the tracing-counter test in
+``tests/test_build.py``).  With identical triangles the output is
+bit-identical to a fresh build by the same builder; under motion the
+boxes stay exactly fitted (refit recomputes them from scratch — no
+monotone growth across frames), only the *topology* quality decays as
+triangles migrate away from where the builder placed them.
+
+The degenerate cull stays frame-accurate: the BVH4 carries the builder's
+pre-cull slot assignment (``leaf_perm``), so each refit re-evaluates the
+zero-area mask for the *current* vertices — a triangle that collapses
+under motion disappears exactly as a rebuild would cull it, and one that
+was degenerate at build time reappears the moment motion gives it area.
+"""
+from __future__ import annotations
+
+from ..bvh import BVH4, depth_of, fit_nodes, leaf_arrays, nondegenerate_mask
+from ..types import Triangle, aabb_of_triangles
+
+
+def refit(bvh: BVH4, triangles: Triangle) -> BVH4:
+    """Re-fit ``bvh``'s boxes around ``triangles``, keeping its topology.
+
+    ``triangles`` must be the same soup with moved vertices (same count,
+    same order — index ``i`` still means triangle ``i``).  Jittable; the
+    depth is recovered statically from the leaf array length.
+    """
+    n = triangles.a.shape[0]
+    n_built = bvh.triangles.a.shape[0]
+    if n != n_built:
+        raise ValueError(
+            f"refit needs the built soup's {n_built} triangles, got {n} "
+            "(topology is preserved -- rebuild to change the soup)")
+    depth = depth_of(bvh)
+
+    leaf_tri, leaf_lo, leaf_hi = leaf_arrays(
+        bvh.leaf_perm, aabb_of_triangles(triangles),
+        nondegenerate_mask(triangles))
+    node_lo, node_hi = fit_nodes(leaf_lo, leaf_hi, depth)
+    return BVH4(node_lo=node_lo, node_hi=node_hi, leaf_tri=leaf_tri,
+                triangles=triangles, leaf_perm=bvh.leaf_perm)

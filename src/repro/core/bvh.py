@@ -1,28 +1,20 @@
-"""LBVH -> BVH4 builder, pure JAX.
+"""BVH4: the implicit 4-wide acceleration structure the datapath traverses.
 
 The paper's OpQuadbox tests one ray against *four* AABBs because a hardware
-ray tracer traverses a 4-wide BVH (RayCore-style unified pipeline).  To make
-the datapath exercisable end-to-end we build that BVH here:
+ray tracer traverses a 4-wide BVH (RayCore-style unified pipeline).  This
+module is the **engine-facing contract** for that structure: the
+:class:`BVH4` record, the implicit-layout helpers, and :func:`child_boxes`
+(one OpQuadbox operand).  *Construction* lives one layer up, in
+:mod:`repro.core.build` — a registry of pluggable builders (``"lbvh"``,
+``"sah"``) that all emit this same layout, so every traversal engine,
+backend, sharding knob and Pallas kernel consumes any builder's tree
+unchanged.
 
-1. Morton-code the triangle centroids (30-bit, 10 bits/axis).
-2. Sort primitives along the Z-order curve (``jnp.argsort`` -- a radix sort
-   on TPU).
-3. Build an *implicit* complete 4-ary tree over the sorted leaves and fit
-   AABBs bottom-up with log4(N) fully-vectorised reduction sweeps.
-
-The implicit layout keeps the builder allocation-free and jittable: node ``k``
-has children ``4k+1 .. 4k+4``; level ``l`` starts at offset ``(4^l - 1) / 3``.
-Empty (padded) leaves carry inverted boxes (lo=+inf, hi=-inf) which can never
-intersect, so traversal needs no validity bitmap.
-
-Exactly-degenerate triangles (zero area: ``(b-a) x (c-a) == 0``, covering
-point and exactly-colinear soups) are culled into the same padded-leaf slot
-at build time.  In exact arithmetic they can never be hit (every edge
-function is 0, so ``t_denom == 0``), but under XLA's CPU mul->add FMA
-contraction (see ``kernels/common.py: round_stage``) the fused edge
-functions keep a rounding residue and a "hit" at a garbage t can slip
-through the jitted engines.  Culling at build is exact, engine-independent,
-and free at query time (``tests/test_degenerate.py`` pins it).
+The implicit layout keeps builders and refit allocation-free and jittable:
+node ``k`` has children ``4k+1 .. 4k+4``; level ``l`` starts at offset
+``(4^l - 1) / 3``.  Empty (padded) leaves carry inverted boxes
+(lo=+inf, hi=-inf) which can never intersect, so traversal needs no
+validity bitmap.
 """
 from __future__ import annotations
 
@@ -32,7 +24,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .types import Box, Triangle, aabb_of_triangles
+from .types import Box, Triangle
 
 
 class BVH4(NamedTuple):
@@ -40,6 +32,9 @@ class BVH4(NamedTuple):
     node_hi: jax.Array  # (num_nodes, 3) f32
     leaf_tri: jax.Array  # (4**depth,) i32 -- triangle index per leaf, -1 = pad
     triangles: Triangle  # original (unsorted) triangle soup, (N, 3)
+    leaf_perm: jax.Array  # (4**depth,) i32 -- the builder's slot assignment
+    # *before* the degenerate cull (-1 = genuinely empty pad slot), so refit
+    # can re-evaluate the cull for the current geometry each frame
 
 
 def bvh4_depth(n_triangles: int) -> int:
@@ -55,55 +50,19 @@ def num_nodes(depth: int) -> int:
     return level_offset(depth + 1)
 
 
-def _expand_bits(v: jax.Array) -> jax.Array:
-    """Spread the low 10 bits of v so there are 2 zero bits between each."""
-    u = jnp.uint32
-    v = (v * u(0x00010001)) & u(0xFF0000FF)
-    v = (v * u(0x00000101)) & u(0x0F00F00F)
-    v = (v * u(0x00000011)) & u(0xC30C30C3)
-    v = (v * u(0x00000005)) & u(0x49249249)
-    return v
+def depth_of(bvh: BVH4) -> int:
+    """Recover the static depth from the leaf array length (4**depth)."""
+    return bvh4_depth(bvh.leaf_tri.shape[0])
 
 
-def morton3d(points01: jax.Array) -> jax.Array:
-    """30-bit Morton codes for points in [0, 1]^3.  points01: (N, 3)."""
-    scaled = jnp.clip(points01 * 1024.0, 0.0, 1023.0).astype(jnp.uint32)
-    x = _expand_bits(scaled[:, 0])
-    y = _expand_bits(scaled[:, 1])
-    z = _expand_bits(scaled[:, 2])
-    return (x << 2) | (y << 1) | z
-
-
-def build_bvh4(tri: Triangle, depth: int | None = None) -> BVH4:
-    """Build a BVH4 over a triangle soup.  ``depth`` must be static if given."""
-    n = tri.a.shape[0]
-    if depth is None:
-        depth = bvh4_depth(n)
-    n_leaves = 4**depth
-
-    boxes = aabb_of_triangles(tri)
-    centroid = 0.5 * (boxes.lo + boxes.hi)
-    scene_lo = jnp.min(boxes.lo, axis=0)
-    scene_hi = jnp.max(boxes.hi, axis=0)
-    extent = jnp.maximum(scene_hi - scene_lo, 1e-12)
-    codes = morton3d((centroid - scene_lo) / extent)
-
-    order = jnp.argsort(codes).astype(jnp.int32)  # (N,)
-    pad = n_leaves - n
-    # degenerate cull: zero-area triangles become padded leaves (tri -1,
-    # inverted box) so no engine can ever report them as hits
-    nondegen = jnp.any(jnp.cross(tri.b - tri.a, tri.c - tri.a) != 0.0,
-                       axis=-1)[order]
-    leaf_tri = jnp.concatenate(
-        [jnp.where(nondegen, order, -1), jnp.full((pad,), -1, jnp.int32)])
-    leaf_lo = jnp.concatenate(
-        [jnp.where(nondegen[:, None], boxes.lo[order], jnp.inf),
-         jnp.full((pad, 3), jnp.inf, jnp.float32)])
-    leaf_hi = jnp.concatenate(
-        [jnp.where(nondegen[:, None], boxes.hi[order], -jnp.inf),
-         jnp.full((pad, 3), -jnp.inf, jnp.float32)])
-
-    # Bottom-up AABB fit: D vectorised sweeps (4-to-1 reductions).
+def fit_nodes(leaf_lo: jax.Array, leaf_hi: jax.Array,
+              depth: int) -> tuple[jax.Array, jax.Array]:
+    """Bottom-up AABB fit over the implicit tree: ``depth`` vectorised
+    4-to-1 reduction sweeps from ``(4**depth, 3)`` leaf boxes to the full
+    ``(num_nodes, 3)`` node arrays (root first).  Shared by every builder
+    and by :func:`repro.core.build.refit` — inverted (empty) leaves
+    propagate as inverted internal boxes for free.
+    """
     levels_lo, levels_hi = [leaf_lo], [leaf_hi]
     cur_lo, cur_hi = leaf_lo, leaf_hi
     for _ in range(depth):
@@ -113,7 +72,36 @@ def build_bvh4(tri: Triangle, depth: int | None = None) -> BVH4:
         levels_hi.append(cur_hi)
     node_lo = jnp.concatenate(levels_lo[::-1], axis=0)  # root (level 0) first
     node_hi = jnp.concatenate(levels_hi[::-1], axis=0)
-    return BVH4(node_lo=node_lo, node_hi=node_hi, leaf_tri=leaf_tri, triangles=tri)
+    return node_lo, node_hi
+
+
+def nondegenerate_mask(tri: Triangle) -> jax.Array:
+    """Which triangles have exactly nonzero area (``(b-a) x (c-a) != 0``).
+
+    Exactly-degenerate triangles (point and exactly-colinear soups) are
+    culled into padded-leaf slots at build time.  In exact arithmetic they
+    can never be hit (every edge function is 0, so ``t_denom == 0``), but
+    under XLA's CPU mul->add FMA contraction (see ``kernels/common.py:
+    round_stage``) the fused edge functions keep a rounding residue and a
+    "hit" at a garbage t can slip through the jitted engines.  Culling at
+    build is exact, engine-independent, and free at query time
+    (``tests/test_degenerate.py`` pins it).
+    """
+    return jnp.any(jnp.cross(tri.b - tri.a, tri.c - tri.a) != 0.0, axis=-1)
+
+
+def leaf_arrays(leaf_perm: jax.Array, boxes: Box,
+                nondegen: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """``(leaf_tri, leaf_lo, leaf_hi)`` from a builder's slot assignment,
+    with the degenerate cull applied to the *current* geometry — shared by
+    both builders and by refit, so a refit frame culls (and un-culls)
+    exactly as a fresh build of the same triangles would."""
+    safe = jnp.maximum(leaf_perm, 0)
+    live = (leaf_perm >= 0) & nondegen[safe]
+    leaf_tri = jnp.where(live, leaf_perm, -1)
+    leaf_lo = jnp.where(live[:, None], boxes.lo[safe], jnp.inf)
+    leaf_hi = jnp.where(live[:, None], boxes.hi[safe], -jnp.inf)
+    return leaf_tri, leaf_lo, leaf_hi
 
 
 def child_boxes(bvh: BVH4, node_idx: jax.Array) -> Box:

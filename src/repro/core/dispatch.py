@@ -196,3 +196,12 @@ def shard_rows(fn, mesh: Mesh, axis: str = BATCH_AXIS):
     come back as one value per shard."""
     return shard_map_unchecked(fn, mesh, in_specs=(P(axis),),
                                out_specs=P(axis))
+
+
+def shard_rows_ctx(fn, mesh: Mesh, axis: str = BATCH_AXIS):
+    """:func:`shard_rows` for ``fn(ctx, rows)``: the first argument is a
+    replicated context operand (a BVH4 under animation — threaded as a
+    runtime argument, not closed over, so ``Scene.refit`` swaps its arrays
+    without retracing), the second is row-sharded as usual."""
+    return shard_map_unchecked(fn, mesh, in_specs=(P(), P(axis)),
+                               out_specs=P(axis))

@@ -10,7 +10,12 @@ once and queried many times — the RTNN/CrossRT model of declaring queries
 against a prepared acceleration structure:
 
 * :class:`Scene` — built once from a triangle soup; owns the ``BVH4``, its
-  static ``depth``, and device placement.
+  static ``depth``, and device placement.  Construction is pluggable
+  (``builder="lbvh" | "sah"``, the :mod:`repro.core.build` registry,
+  DESIGN.md §7), geometry is updatable in place (``Scene.refit`` — zero
+  retraces per animation frame, because every trace backend threads the
+  BVH as a runtime argument rather than a closure constant), and
+  ``Scene.stats()`` reports tree quality (SAH cost + measured jobs/ray).
 * :class:`VectorIndex` — built once from a database matrix; owns the
   precomputed ``||c||^2`` norms reused by every distance query.
 * :class:`QueryEngine` — the single typed entry point
@@ -44,7 +49,11 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .bvh import BVH4, build_bvh4, bvh4_depth
+from .build import build as build_structure
+from .build import refit as refit_bvh
+from .build import tree_stats
+from .build.quality import TreeStats
+from .bvh import BVH4
 from .dispatch import (
     ExecPlan,
     concat_rows,
@@ -52,6 +61,7 @@ from .dispatch import (
     replicated,
     resolve_shards,
     shard_rows,
+    shard_rows_ctx,
     split_blocks,
 )
 from .knn import (
@@ -151,7 +161,9 @@ def _elem_key(tree) -> tuple:
 # ---------------------------------------------------------------------------
 
 # name -> (supported ray types, builder(scene, ray_type, t_min, max_rounds)
-#          returning fn(rays) -> TraceResult)
+#          returning fn(bvh, rays) -> TraceResult; the BVH is a *runtime*
+#          argument — not closed over — so Scene.refit swaps in new boxes
+#          with zero retracing)
 _TRACE_BACKENDS: dict[str, tuple[tuple[str, ...], Callable]] = {}
 
 # name -> builder(index, metric, interpret) returning fn(queries) -> (M, N)
@@ -161,7 +173,9 @@ _DISTANCE_BACKENDS: dict[str, Callable] = {}
 
 def register_trace_backend(name: str, ray_types=RAY_TYPES):
     """Register a traversal backend under ``name``.  The builder receives
-    the static query config and returns a jit-able ``fn(rays)``."""
+    the static query config and returns a jit-able ``fn(bvh, rays)`` —
+    the scene provides static structure (depth), the BVH arrays arrive
+    per call so animated (refit) scenes re-enter the compiled cache."""
     def deco(build):
         _TRACE_BACKENDS[name] = (tuple(ray_types), build)
         return build
@@ -196,8 +210,8 @@ def _build_per_ray(scene: "Scene", ray_type: str, t_min: float,
         raise ValueError("per_ray backend has no max_rounds support; "
                          "use backend='wavefront'")
 
-    def run(rays):
-        rec = trace_rays(scene.bvh, rays, scene.depth)
+    def run(bvh, rays):
+        rec = trace_rays(bvh, rays, scene.depth)
         # a ray is active for exactly quadbox_jobs consecutive rounds, so
         # the batch-level round count is the max per-ray job count
         return TraceResult(rec.t, rec.tri_index, rec.hit, rec.quadbox_jobs,
@@ -210,8 +224,8 @@ def _build_per_ray(scene: "Scene", ray_type: str, t_min: float,
 def _build_wavefront(scene: "Scene", ray_type: str, t_min: float,
                      max_rounds):
     """Batch-level frontier loop: closest / any / shadow rays."""
-    def run(rays):
-        rec = trace_wavefront(scene.bvh, rays, scene.depth,
+    def run(bvh, rays):
+        rec = trace_wavefront(bvh, rays, scene.depth,
                               ray_type=ray_type, t_min=t_min,
                               max_rounds=max_rounds)
         return TraceResult(*rec)  # field-for-field identical record
@@ -256,34 +270,90 @@ def _build_pallas_scores(index: "VectorIndex", metric: str, interpret):
 # ---------------------------------------------------------------------------
 
 
+def _as_triangles(triangles) -> Triangle:
+    """Coerce a :class:`Triangle` soup or ``(N, 3, 3)`` vertex array."""
+    if isinstance(triangles, Triangle):
+        return triangles
+    arr = jnp.asarray(triangles, jnp.float32)
+    if arr.ndim != 3 or arr.shape[1:] != (3, 3):
+        raise ValueError(
+            f"expected Triangle or (N, 3, 3) vertices, got {arr.shape}")
+    return Triangle(arr[:, 0], arr[:, 1], arr[:, 2])
+
+
+def _validate_finite(tri: Triangle, where: str) -> None:
+    """Reject non-finite vertices eagerly: a single NaN/inf poisons the
+    scene root box, every Morton code / SAH bin, and every traversal that
+    follows.  Skipped under tracing so the builders stay jittable."""
+    if any(isinstance(f, jax.core.Tracer) for f in tri):
+        return
+    if not bool(jnp.all(jnp.isfinite(jnp.stack([tri.a, tri.b, tri.c])))):
+        raise ValueError(
+            f"{where}: triangle vertices must be finite (no NaN/inf) — "
+            "a single bad vertex poisons the scene bounds and every "
+            "acceleration-structure build")
+
+
+# refit is jittable with static shapes, so one jit here means every
+# animation frame after the first re-enters one compiled sweep
+_refit_jit = jax.jit(refit_bvh)
+
+
 class Scene:
     """A prepared triangle scene: ``BVH4`` + its static traversal depth.
 
     Callers stop threading ``(bvh, depth)`` manually — the pair travels
-    together, optionally placed on a device at build time.
+    together, optionally placed on a device at build time.  The
+    acceleration structure itself is pluggable
+    (``builder="lbvh" | "sah"``, the :mod:`repro.core.build` registry) and
+    updatable in place (:meth:`refit` — dynamic scenes without rebuild or
+    retrace); :meth:`stats` reports the tree-quality metrics.
     """
 
-    def __init__(self, bvh: BVH4, depth: int, device=None):
+    def __init__(self, bvh: BVH4, depth: int, device=None,
+                 builder: str = "lbvh"):
         if device is not None:
             bvh = jax.device_put(bvh, device)
         self.bvh = bvh
         self.depth = int(depth)
+        self.builder = builder
+        #: bumped by :meth:`refit`; engines key their replicated copies on
+        #: it so sharded queries pick up the new boxes
+        self.version = 0
 
     @classmethod
     def from_triangles(cls, triangles, depth: int | None = None,
-                       device=None) -> "Scene":
+                       device=None, builder: str = "lbvh") -> "Scene":
         """Build from a :class:`Triangle` soup or an ``(N, 3, 3)`` array of
-        per-triangle vertices."""
-        if not isinstance(triangles, Triangle):
-            arr = jnp.asarray(triangles, jnp.float32)
-            if arr.ndim != 3 or arr.shape[1:] != (3, 3):
-                raise ValueError(
-                    f"expected Triangle or (N, 3, 3) vertices, got {arr.shape}")
-            triangles = Triangle(arr[:, 0], arr[:, 1], arr[:, 2])
-        n = triangles.a.shape[0]
-        if depth is None:
-            depth = bvh4_depth(n)
-        return cls(build_bvh4(triangles, depth), depth, device)
+        per-triangle vertices, with the named registered builder."""
+        triangles = _as_triangles(triangles)
+        _validate_finite(triangles, "Scene.from_triangles")
+        res = build_structure(triangles, builder, depth)
+        return cls(res.bvh, res.depth, device, builder=res.builder)
+
+    def refit(self, triangles) -> "Scene":
+        """Update the scene's geometry in place, keeping its topology.
+
+        Re-sweeps the AABBs bottom-up around the moved ``triangles`` (same
+        soup, same order; ``depth`` vectorised reductions) without
+        re-sorting or re-binning.  All shapes are preserved, and engines
+        thread the BVH as a runtime argument, so every compiled query on
+        this scene re-enters the jit cache with **zero retracing** —
+        the contract animated scenes rely on (``tests/test_build.py``).
+        Returns ``self`` for chaining.
+        """
+        triangles = _as_triangles(triangles)
+        _validate_finite(triangles, "Scene.refit")
+        # the soup-size precondition lives in refit() itself (shape-static,
+        # so it raises identically through the jitted path)
+        self.bvh = _refit_jit(self.bvh, triangles)
+        self.version += 1
+        return self
+
+    def stats(self, rays=None, probes: int = 256) -> TreeStats:
+        """Tree-quality metrics: SAH cost plus mean datapath jobs per ray
+        measured on ``rays`` (or a deterministic probe batch)."""
+        return tree_stats(self.bvh, self.builder, rays=rays, probes=probes)
 
     @property
     def num_triangles(self) -> int:
@@ -294,7 +364,7 @@ class Scene:
 
     def __repr__(self):
         return (f"Scene(num_triangles={self.num_triangles}, "
-                f"depth={self.depth})")
+                f"depth={self.depth}, builder={self.builder!r})")
 
 
 class VectorIndex:
@@ -477,14 +547,18 @@ class QueryEngine:
 
     def _placed_scene(self, plan: ExecPlan) -> "Scene":
         """The scene with its BVH replicated across the plan's mesh
-        (placed once per shard count, reused by every later query)."""
+        (placed once per shard count and scene version — a refit bumps the
+        version, so animated scenes re-place the new boxes without
+        recompiling anything)."""
         if plan.shards == 1:
             return self.scene
-        key = ("scene", plan.shards)
+        key = ("scene", plan.shards, self.scene.version)
         placed = self._placed.get(key)
         if placed is None:
+            self._placed = {k: v for k, v in self._placed.items()
+                            if k[0] != "scene" or k[1] != plan.shards}
             placed = Scene(replicated(plan.mesh, self.scene.bvh),
-                           self.scene.depth)
+                           self.scene.depth, builder=self.scene.builder)
             self._placed[key] = placed
         return placed
 
@@ -549,21 +623,21 @@ class QueryEngine:
             + _elem_key(rays)
 
         def build_fn():
-            run = build(self._placed_scene(plan), ray_type, t_min,
-                        max_rounds)
+            run = build(self.scene, ray_type, t_min, max_rounds)
             if plan.shards == 1:
                 return run
 
-            def per_shard(r):
-                rec = run(r)
+            def per_shard(bvh, r):
+                rec = run(bvh, r)
                 # lift the scalar round count to a length-1 row axis so the
                 # shard_map returns one value per shard (reduced below)
                 return rec._replace(rounds=jnp.atleast_1d(rec.rounds))
 
-            return shard_rows(per_shard, plan.mesh)
+            return shard_rows_ctx(per_shard, plan.mesh)
 
         fn = self._compiled(key, build_fn)
-        outs = [fn(block) for block in split_blocks(rays, plan)]
+        bvh = self._placed_scene(plan).bvh
+        outs = [fn(bvh, block) for block in split_blocks(rays, plan)]
         # streamed assembly: per-ray rows concatenate across chunks; the
         # batch-level round count is the max over chunks and shards, which
         # equals the single-device value (a ray is active for exactly

@@ -4,9 +4,11 @@ The parity contract (DESIGN.md §5–§6) says results are *bit-identical*
 across execution strategies, not merely close.  This suite hammers that
 with hypothesis-generated random scenes / rays / databases:
 
-* every trace backend × ray type against the per-ray / free-function
-  oracles (``trace_rays``, ``trace_wavefront``), bit for bit including the
-  per-ray job counters and the batch round count;
+* every trace backend × ray type × **acceleration-structure builder**
+  (``"lbvh"`` / ``"sah"``, drawn as a hypothesis parameter) against the
+  per-ray / free-function oracles (``trace_rays``, ``trace_wavefront``)
+  on that builder's own tree, bit for bit including the per-ray job
+  counters and the batch round count;
 * every distance backend × metric against the jitted free functions fed
   precomputed ``||c||^2`` — bit-exact for the MXU form, and for the Pallas
   tiled accumulator the documented score caveat (rank-equivalent
@@ -36,14 +38,15 @@ TRACE_FIELDS = ("t", "tri_index", "hit", "quadbox_jobs", "triangle_jobs")
 # small seeded domains so engines/BVHs cache across hypothesis examples
 N_TRI = (1, 3, 17, 230)  # single-triangle, root-is-leaf-parent, mid, deep
 SCENE_SEEDS = (0, 1, 2, 3)
+BUILDERS = ("lbvh", "sah")
 DB_SHAPES = ((37, 8), (211, 24))
 
 _scenes: dict = {}
 _indexes: dict = {}
 
 
-def _scene(seed, n_tri):
-    key = (seed, n_tri)
+def _scene(seed, n_tri, builder="lbvh"):
+    key = (seed, n_tri, builder)
     if key not in _scenes:
         rng = np.random.default_rng(1000 * seed + n_tri)
         ctr = rng.uniform(-1, 1, (n_tri, 3)).astype(np.float32)
@@ -51,7 +54,7 @@ def _scene(seed, n_tri):
         d2 = rng.normal(scale=0.2, size=(n_tri, 3)).astype(np.float32)
         tri = Triangle(jnp.asarray(ctr), jnp.asarray(ctr + d1),
                        jnp.asarray(ctr + d2))
-        scene = Scene.from_triangles(tri)
+        scene = Scene.from_triangles(tri, builder=builder)
         _scenes[key] = (scene, scene.engine(pad_multiple=8, shard=1),
                         scene.engine(pad_multiple=8, shard=1, chunk_size=8))
     return _scenes[key]
@@ -84,13 +87,14 @@ def _rays(rng, n):
 
 @given(scene_seed=st.sampled_from(SCENE_SEEDS),
        n_tri=st.sampled_from(N_TRI),
+       builder=st.sampled_from(BUILDERS),
        ray_seed=st.integers(0, 2**31 - 1),
        n_rays=st.integers(1, 24),
        ray_type=st.sampled_from(["closest", "any", "shadow"]))
 @settings(max_examples=25, deadline=None)
-def test_fuzz_trace_backends_bitmatch_oracles(scene_seed, n_tri, ray_seed,
-                                              n_rays, ray_type):
-    scene, engine, chunked = _scene(scene_seed, n_tri)
+def test_fuzz_trace_backends_bitmatch_oracles(scene_seed, n_tri, builder,
+                                              ray_seed, n_rays, ray_type):
+    scene, engine, chunked = _scene(scene_seed, n_tri, builder)
     rays = _rays(np.random.default_rng(ray_seed), n_rays)
 
     ref = trace_wavefront(scene.bvh, rays, scene.depth, ray_type=ray_type)
