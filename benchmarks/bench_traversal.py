@@ -5,9 +5,15 @@ Runs the same ray batch through the session ``QueryEngine``'s traversal
 backends side by side:
 
 * ``per_ray``   — vmapped per-ray ``while_loop`` oracle, where the whole
-  batch iterates until the slowest ray drains, and
+  batch iterates until the slowest ray drains,
 * ``wavefront`` — batch-level frontier loop, one batched OpQuadbox job per
-  round,
+  round, with the full SoA loop state a jit carry that round-trips HBM
+  every round, and
+* ``pallas``    — the fused traversal kernel (``kernels/traverse.py``):
+  the same loop runs to completion *inside* one kernel with ray state and
+  stacks on-chip; its row reports the loop-state HBM traffic that
+  residency removes (bit-identical hits/counters, so the delta is pure
+  memory scheduling),
 
 plus the wavefront any-hit mode (occlusion queries retire on first hit).
 The engine owns the jit cache, so the second (timed) call measures the
@@ -75,6 +81,24 @@ def run(rows):
                      f"hit_rate={float(rec.hit.mean()):.2f};"
                      f"batched_rounds={int(rec.rounds)};"
                      f"devices=1;chunk_size=none"))
+
+    # fused Pallas traversal: the whole round loop inside one kernel.  The
+    # wavefront loop's carry (stack + sp + best-hit + counters + done) is
+    # HBM-resident state re-materialized every round; the fused kernel
+    # keeps it in VMEM/VREGs, so `rounds x state` round trips disappear.
+    from repro.core.traversal import STACK_SIZE
+    rec, dt = _time(lambda r: engine.trace(r, backend="pallas"), rays)
+    state_bytes = STACK_SIZE * 4 + 4 * 5 + 1  # stack + sp/t/tri/qb/ntri + done
+    removed_mb = 2 * int(rec.rounds) * n_rays * state_bytes / 1e6  # rd+wr
+    rows.append(("traversal_pallas_fused_256rays_2k_tris", dt / n_rays * 1e6,
+                 f"rays_per_s={n_rays / dt:.3e};"
+                 f"quadbox_jobs_per_ray={float(rec.quadbox_jobs.mean()):.1f};"
+                 f"tri_jobs_per_ray={float(rec.triangle_jobs.mean()):.1f};"
+                 f"hit_rate={float(rec.hit.mean()):.2f};"
+                 f"batched_rounds={int(rec.rounds)};"
+                 f"loop_state_bytes_per_ray={state_bytes};"
+                 f"hbm_loop_traffic_removed_mb={removed_mb:.2f};"
+                 f"devices=1;chunk_size=none"))
 
     # chunked streaming: same batch through fixed-size microbatch blocks
     # (one compiled function for all chunks; peak memory ~ chunk_size rows)

@@ -5,7 +5,7 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import VectorIndex
+from repro.api import Scene, VectorIndex, trace_backends
 from repro.core import (OP_ANGULAR, OP_EUCLIDEAN, OP_QUADBOX, OP_TRIANGLE,
                         Box, Triangle, make_ray, unified_stream)
 from repro.core.stream import make_jobs
@@ -62,6 +62,25 @@ def main():
     print("  cosine matrix:\n", np.asarray(sims).round(3))
     res = engine.nearest(jnp.asarray(q), k=2, metric="cosine")
     print("  top-2 neighbours per query:", np.asarray(res.indices).tolist())
+
+    print("== Traversal backends: one scene, bit-identical engines ==")
+    # a tetrahedron traced by every registered backend — the wavefront
+    # batch loop and the fused Pallas kernel (loop on-chip, DESIGN.md §8)
+    # return the same hits AND the same per-ray datapath job counters
+    v = np.asarray([[1, 1, 1], [1, -1, -1], [-1, 1, -1], [-1, -1, 1]],
+                   np.float32)
+    faces = [(0, 1, 2), (0, 3, 1), (0, 2, 3), (1, 3, 2)]
+    verts = np.stack([np.stack([v[a], v[b], v[c]]) for a, b, c in faces])
+    scene = Scene.from_triangles(verts)
+    tracer = scene.engine(shard=1)
+    org = np.asarray([[-3.0, 0.1 * i, 0.05 * i] for i in range(4)],
+                     np.float32)
+    rays = make_ray(jnp.asarray(org), jnp.asarray(-org))
+    print("  registered:", trace_backends())
+    for backend in ("wavefront", "pallas"):
+        rec = tracer.trace(rays, backend=backend)
+        print(f"  {backend:9s} t={np.asarray(rec.t).round(3)} "
+              f"quadbox_jobs={np.asarray(rec.quadbox_jobs).tolist()}")
 
 
 if __name__ == "__main__":

@@ -11,17 +11,25 @@ local device — replicated scene, bit-identical image) and a ``chunk_size``
 so the whole framebuffer streams through fixed-size microbatches of rays
 sharing one compiled trace.
 
+``--trace-backend`` selects the traversal engine (``auto`` | ``per_ray``
+| ``wavefront`` | ``pallas``); every backend renders the identical image
+(the bit-parity contract), so the flag is pure scheduling — ``pallas``
+runs the fused kernel that keeps the traversal loop on-chip (DESIGN.md
+§8; interpret mode off-TPU).
+
 Run:  PYTHONPATH=src python examples/render.py [out.pgm]
+      PYTHONPATH=src python examples/render.py --trace-backend pallas
       XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
           PYTHONPATH=src python examples/render.py  # same image, 8-way
 """
-import sys
+import argparse
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import Scene, Triangle, make_ray
+from repro.api import Scene, Triangle, make_ray, trace_backends
+from repro.core.session import trace_backend_ray_types
 
 
 def icosphere(subdiv=3):
@@ -67,20 +75,34 @@ def build_scene():
 
 
 def main():
-    out_path = sys.argv[1] if len(sys.argv) > 1 else "/tmp/render.pgm"
+    ap = argparse.ArgumentParser()
+    ap.add_argument("out", nargs="?", default="/tmp/render.pgm")
+    # only backends that can serve the shadow pass are offered (per_ray
+    # is closest-hit only)
+    shadow_capable = tuple(b for b in trace_backends()
+                           if "shadow" in trace_backend_ray_types(b))
+    ap.add_argument("--trace-backend", default="auto",
+                    choices=("auto",) + shadow_capable,
+                    help="traversal engine (every choice renders the "
+                         "identical image)")
+    ap.add_argument("--res", type=int, default=96,
+                    help="framebuffer resolution (res x res rays)")
+    args = ap.parse_args()
+    out_path = args.out
     tris, tri = build_scene()
     scene = Scene.from_triangles(tri)
     # shard="auto": rays data-parallel over every local device (scene
     # replicated, image bit-identical); chunk_size: the framebuffer streams
     # through fixed-size ray microbatches sharing one compiled trace
-    engine = scene.engine(shard="auto", chunk_size=4096)
+    engine = scene.engine(shard="auto", chunk_size=4096,
+                          backend=args.trace_backend)
     print(f"scene: {scene.num_triangles} triangles (sphere + ground), "
           f"BVH4 depth {scene.depth}, {jax.local_device_count()} device(s), "
-          f"chunk_size=4096")
+          f"chunk_size=4096, trace_backend={args.trace_backend}")
 
     # pinhole camera above the sphere looking slightly down: sphere, ground
     # and the sphere's cast shadow are all in frame
-    res = 96
+    res = args.res
     eye = np.asarray([0.0, 1.0, -3.6], np.float32)
     ys, xs = np.meshgrid(np.linspace(0.75, -0.75, res),
                          np.linspace(-0.75, 0.75, res), indexing="ij")

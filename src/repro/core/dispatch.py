@@ -140,7 +140,8 @@ class ExecPlan(NamedTuple):
 
 
 def make_plan(n: int, *, pad_multiple: int, shards: int = 1,
-              chunk_size: Optional[int] = None) -> ExecPlan:
+              chunk_size: Optional[int] = None,
+              lane_multiple: Optional[int] = None) -> ExecPlan:
     """Schedule ``n`` rows into fixed-size blocks.
 
     The block is ``chunk_size`` (the whole batch when None) rounded up so
@@ -148,13 +149,22 @@ def make_plan(n: int, *, pad_multiple: int, shards: int = 1,
     per-shard padding composing with the pad-to-lane policy.  With
     ``shards=1, chunk_size=None`` this degenerates to the original
     single-call ``ceil_to(n, pad_multiple)`` behavior.
+
+    ``lane_multiple`` is a backend-declared hard tile width (e.g. the
+    fused Pallas traversal kernel's 128-lane tiles): the effective
+    per-shard multiple becomes ``max(pad_multiple, lane_multiple)``, so a
+    kernel backend always receives whole tiles per shard per chunk and
+    never re-pads internally.  Padding stays the row-0-repeat identity,
+    so results are unchanged — only the schedule is.
     """
     if n <= 0:
         raise ValueError("make_plan needs n >= 1; guard empty batches first")
     if chunk_size is not None and int(chunk_size) < 1:
         raise ValueError(f"chunk_size must be >= 1, got {chunk_size!r}")
+    multiple = (pad_multiple if lane_multiple is None
+                else max(pad_multiple, int(lane_multiple)))
     rows = n if chunk_size is None else min(int(chunk_size), n)
-    per_shard = ceil_to(math.ceil(rows / shards), pad_multiple)
+    per_shard = ceil_to(math.ceil(rows / shards), multiple)
     block = per_shard * shards
     return ExecPlan(n=n, block=block, n_blocks=-(-n // block), shards=shards)
 
@@ -200,8 +210,9 @@ def shard_rows(fn, mesh: Mesh, axis: str = BATCH_AXIS):
 
 def shard_rows_ctx(fn, mesh: Mesh, axis: str = BATCH_AXIS):
     """:func:`shard_rows` for ``fn(ctx, rows)``: the first argument is a
-    replicated context operand (a BVH4 under animation — threaded as a
-    runtime argument, not closed over, so ``Scene.refit`` swaps its arrays
-    without retracing), the second is row-sharded as usual."""
+    replicated context operand (a BVH4 under animation, or a backend's
+    prepared form of it — threaded as a runtime argument, not closed
+    over, so ``Scene.refit`` swaps its arrays without retracing), the
+    second is row-sharded as usual."""
     return shard_map_unchecked(fn, mesh, in_specs=(P(), P(axis)),
                                out_specs=P(axis))

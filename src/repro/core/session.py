@@ -21,7 +21,8 @@ against a prepared acceleration structure:
 * :class:`QueryEngine` — the single typed entry point
   (``trace`` / ``nearest`` / ``within`` / ``count_within`` / ``scores``),
   with a pluggable backend registry (``"per_ray"`` oracle, ``"wavefront"``,
-  ``"pallas"`` distance kernels, ``"auto"``), per-(shape, backend, query)
+  ``"pallas"`` — the fused traversal kernel for traces, the tiled distance
+  kernels for scores, DESIGN.md §8 — and ``"auto"``), per-(shape, backend, query)
   compiled-function caching modeled on ``serving/engine.py``, and
   automatic pad-to-lane-multiple batching with result unpadding — the
   padding policy defined once instead of ad hoc in every example.
@@ -95,6 +96,7 @@ __all__ = [
     "distance_backends",
     "register_distance_backend",
     "register_trace_backend",
+    "trace_backend_ray_types",
     "trace_backends",
 ]
 
@@ -160,26 +162,61 @@ def _elem_key(tree) -> tuple:
 # Backend registries
 # ---------------------------------------------------------------------------
 
-# name -> (supported ray types, builder(scene, ray_type, t_min, max_rounds)
-#          returning fn(bvh, rays) -> TraceResult; the BVH is a *runtime*
-#          argument — not closed over — so Scene.refit swaps in new boxes
-#          with zero retracing)
-_TRACE_BACKENDS: dict[str, tuple[tuple[str, ...], Callable]] = {}
+# name -> (supported ray types,
+#          builder(scene, ray_type, t_min, max_rounds, interpret)
+#          returning fn(ctx, rays) -> TraceResult — ``ctx`` is a *runtime*
+#          argument (the BVH, or the backend's prepared form of it), not
+#          closed over, so Scene.refit swaps in new boxes with zero
+#          retracing,
+#          lane multiple the backend wants per shard,
+#          optional prepare(scene) -> fn(bvh) -> ctx hook: computed once
+#          per scene version — not per chunk — and replicated per mesh)
+_TRACE_BACKENDS: dict[str, tuple] = {}
+
+#: tile width of the fused Pallas traversal kernel (= kernels.common.LANES,
+#: kept literal here so the registry needs no kernel import at module init;
+#: tests/test_session.py pins the equality)
+PALLAS_TRACE_LANES = 128
 
 # name -> builder(index, metric, interpret) returning fn(queries) -> (M, N)
 # score matrix (squared distances for euclidean, similarities otherwise)
 _DISTANCE_BACKENDS: dict[str, Callable] = {}
 
 
-def register_trace_backend(name: str, ray_types=RAY_TYPES):
+def register_trace_backend(name: str, ray_types=RAY_TYPES,
+                           lane_multiple: int | None = None,
+                           prepare: Callable | None = None):
     """Register a traversal backend under ``name``.  The builder receives
-    the static query config and returns a jit-able ``fn(bvh, rays)`` —
-    the scene provides static structure (depth), the BVH arrays arrive
-    per call so animated (refit) scenes re-enter the compiled cache."""
+    the static query config — ``build(scene, ray_type, t_min, max_rounds,
+    interpret)`` — and returns a jit-able ``fn(ctx, rays)``: the scene
+    provides static structure (depth), the context arrays arrive per call
+    so animated (refit) scenes re-enter the compiled cache.
+
+    ``lane_multiple`` (optional) is the per-shard row multiple the backend
+    wants its batches padded to (e.g. the fused Pallas kernel's 128-lane
+    tile width); the dispatch planner folds it into every ExecPlan so
+    kernel-backed backends always receive whole tiles.
+
+    ``prepare`` (optional) is ``prepare(scene) -> fn(bvh) -> ctx``: a
+    jit-able transform of the BVH into the backend's resident operand
+    form (the fused kernel's packed rows-by-lanes arrays).  The engine
+    runs it once per scene version and feeds the result to every
+    chunk/shard, so O(scene) packing is never re-executed per block;
+    backends without one receive the BVH itself as ``ctx``."""
     def deco(build):
-        _TRACE_BACKENDS[name] = (tuple(ray_types), build)
+        _TRACE_BACKENDS[name] = (tuple(ray_types), build, lane_multiple,
+                                 prepare)
         return build
     return deco
+
+
+def trace_backend_ray_types(name: str) -> tuple[str, ...]:
+    """The ray types a registered trace backend supports (used by the
+    golden-trace suite to iterate every backend × ray type)."""
+    if name not in _TRACE_BACKENDS:
+        raise ValueError(f"unknown trace backend {name!r} "
+                         f"(registered: {trace_backends()})")
+    return _TRACE_BACKENDS[name][0]
 
 
 def register_distance_backend(name: str):
@@ -201,8 +238,9 @@ def distance_backends() -> tuple[str, ...]:
 
 @register_trace_backend("per_ray", ray_types=("closest",))
 def _build_per_ray(scene: "Scene", ray_type: str, t_min: float,
-                   max_rounds):
-    """The vmapped per-ray ``while_loop`` oracle (closest-hit only)."""
+                   max_rounds, interpret=None):
+    """The vmapped per-ray ``while_loop`` oracle (closest-hit only;
+    pure jnp, so ``interpret`` does not apply)."""
     if t_min:
         raise ValueError("per_ray backend has no t_min support; "
                          "use backend='wavefront'")
@@ -222,13 +260,49 @@ def _build_per_ray(scene: "Scene", ray_type: str, t_min: float,
 
 @register_trace_backend("wavefront", ray_types=RAY_TYPES)
 def _build_wavefront(scene: "Scene", ray_type: str, t_min: float,
-                     max_rounds):
-    """Batch-level frontier loop: closest / any / shadow rays."""
+                     max_rounds, interpret=None):
+    """Batch-level frontier loop: closest / any / shadow rays (pure jnp,
+    so ``interpret`` does not apply)."""
     def run(bvh, rays):
         rec = trace_wavefront(bvh, rays, scene.depth,
                               ray_type=ray_type, t_min=t_min,
                               max_rounds=max_rounds)
         return TraceResult(*rec)  # field-for-field identical record
+
+    return run
+
+
+def _prepare_pallas_trace(scene: "Scene"):
+    """The fused kernel's ``prepare`` hook: pack the BVH into its
+    resident rows-by-lanes operands once per scene version."""
+    from ..kernels.traverse import pack_bvh  # deferred (circular init)
+    return pack_bvh
+
+
+@register_trace_backend("pallas", ray_types=RAY_TYPES,
+                        lane_multiple=PALLAS_TRACE_LANES,
+                        prepare=_prepare_pallas_trace)
+def _build_pallas_trace(scene: "Scene", ray_type: str, t_min: float,
+                        max_rounds, interpret=None):
+    """Fused Pallas traversal (``kernels/traverse.py``, DESIGN.md §8): the
+    whole pop → OpQuadbox → OpTriangle → commit round loop runs inside one
+    kernel with per-lane ray state and the traversal stack on-chip, built
+    from the same ``core/datapath`` stage helpers — hits and job counters
+    bit-match the wavefront engine.  ``ctx`` is the prepared
+    (``pack_bvh``) operand form; ``interpret=None`` auto-selects
+    interpret mode off-TPU (the engine-wide ``interpret`` knob threads
+    through, same as the distance kernels)."""
+    # deferred import: repro.kernels imports repro.core submodules, so a
+    # top-level import here would be circular during package init
+    from ..kernels.traverse import traverse_packed
+
+    depth = scene.depth
+
+    def run(ctx, rays):
+        rec = traverse_packed(ctx, rays, depth, ray_type=ray_type,
+                              t_min=t_min, max_rounds=max_rounds,
+                              interpret=interpret)
+        return TraceResult(*rec)  # WavefrontRecord: field-for-field match
 
     return run
 
@@ -472,6 +546,12 @@ class QueryEngine:
     #: "auto" (the batch loop only pays off once the frontier is wide)
     AUTO_PER_RAY_MAX = 8
 
+    #: "auto" routes TPU traces to the fused Pallas kernel only while the
+    #: scene's resident operands (node boxes + leaf table + triangle soup,
+    #: mapped whole into every tile) fit comfortably in VMEM (~16 MB/core);
+    #: past this budget the wavefront engine handles the scene unchanged
+    AUTO_PALLAS_SCENE_BYTES = 8 * 2**20
+
     def __init__(self, scene: Scene | None = None,
                  index: VectorIndex | None = None, *,
                  backend: str = "auto", pad_multiple: int | None = None,
@@ -517,15 +597,33 @@ class QueryEngine:
                               max_rounds: int | None = None,
                               shards: int = 1) -> str:
         """The backend "auto" picks for a trace: per-ray oracle for tiny
-        plain closest-hit batches, wavefront everywhere else (including
-        any query the oracle cannot express — t_min, max_rounds — and any
-        sharded batch: a multi-device frontier is by definition not
-        tiny)."""
+        plain closest-hit batches; every other query — including ones the
+        oracle cannot express (t_min, max_rounds) and any sharded batch
+        (a multi-device frontier is by definition not tiny) — goes to a
+        batch engine: the fused Pallas traversal kernel on TPU (the loop
+        state stays on-chip) while the scene fits the kernel's on-chip
+        budget, the wavefront engine everywhere else (off-TPU interpret
+        mode would only add overhead; an over-budget tree would overflow
+        VMEM).  All three return bit-identical results, so the policy is
+        pure scheduling."""
         if (shards == 1 and ray_type == "closest"
                 and n_rays <= self.AUTO_PER_RAY_MAX
                 and not t_min and max_rounds is None):
             return "per_ray"
+        if (jax.default_backend() == "tpu"
+                and self._scene_resident_bytes() <= self.AUTO_PALLAS_SCENE_BYTES):
+            return "pallas"
         return "wavefront"
+
+    def _scene_resident_bytes(self) -> int:
+        """Bytes the fused traversal kernel keeps resident per tile:
+        node boxes + leaf table + triangle soup (f32/i32 = 4 B each)."""
+        if self.scene is None:
+            return 0
+        bvh = self.scene.bvh
+        n_nodes = bvh.node_lo.shape[0]
+        return 4 * (2 * n_nodes * 3 + bvh.leaf_tri.shape[0]
+                    + 9 * bvh.triangles.a.shape[0])
 
     def resolve_distance_backend(self) -> str:
         """The backend "auto" picks for distance queries: compiled Pallas
@@ -539,11 +637,12 @@ class QueryEngine:
         return resolve_shards(
             self.default_shard if shard is None else shard, n)
 
-    def _plan(self, n: int, shards: int, chunk_size) -> ExecPlan:
+    def _plan(self, n: int, shards: int, chunk_size,
+              lane_multiple: int | None = None) -> ExecPlan:
         if chunk_size is None:
             chunk_size = self.default_chunk_size
         return make_plan(n, pad_multiple=self.pad_multiple, shards=shards,
-                         chunk_size=chunk_size)
+                         chunk_size=chunk_size, lane_multiple=lane_multiple)
 
     def _placed_scene(self, plan: ExecPlan) -> "Scene":
         """The scene with its BVH replicated across the plan's mesh
@@ -561,6 +660,30 @@ class QueryEngine:
                            self.scene.depth, builder=self.scene.builder)
             self._placed[key] = placed
         return placed
+
+    def _trace_ctx(self, name: str, prepare, plan: ExecPlan):
+        """The backend's trace context operand: the (replicated) BVH by
+        default, or — when the backend registered a ``prepare`` hook —
+        its prepared form (the fused kernel's packed operands), computed
+        through one jitted prepare function per backend, once per scene
+        version and mesh, then re-fed to every chunk and shard.  A refit
+        bumps the version, so animated scenes re-pack (one compiled
+        re-execution, zero retraces) without recompiling anything."""
+        if prepare is None:
+            return self._placed_scene(plan).bvh
+        key = ("trace_ctx", name, plan.shards, self.scene.version)
+        ctx = self._placed.get(key)
+        if ctx is None:
+            self._placed = {k: v for k, v in self._placed.items()
+                            if k[0] != "trace_ctx" or k[1] != name
+                            or k[2] != plan.shards}
+            fn = self._compiled(("prepare", name),
+                                lambda: prepare(self.scene))
+            ctx = fn(self.scene.bvh)
+            if plan.shards > 1:
+                ctx = replicated(plan.mesh, ctx)
+            self._placed[key] = ctx
+        return ctx
 
     def _placed_index(self, plan: ExecPlan) -> "VectorIndex":
         """The index with database + precomputed norms replicated across
@@ -605,7 +728,7 @@ class QueryEngine:
         if name not in _TRACE_BACKENDS:
             raise ValueError(f"unknown trace backend {name!r} "
                              f"(registered: {trace_backends()})")
-        supported, build = _TRACE_BACKENDS[name]
+        supported, build, lane_multiple, prepare = _TRACE_BACKENDS[name]
         if ray_type not in supported:
             raise ValueError(f"backend {name!r} supports ray types "
                              f"{supported}, got {ray_type!r}")
@@ -618,17 +741,19 @@ class QueryEngine:
                 triangle_jobs=jnp.zeros((0,), jnp.int32),
                 rounds=jnp.int32(0))
 
-        plan = self._plan(n, shards, chunk_size)
+        plan = self._plan(n, shards, chunk_size,
+                          lane_multiple=lane_multiple)
         key = ("trace", name, ray_type, t_min, max_rounds) + plan.key \
             + _elem_key(rays)
 
         def build_fn():
-            run = build(self.scene, ray_type, t_min, max_rounds)
+            run = build(self.scene, ray_type, t_min, max_rounds,
+                        self.interpret)
             if plan.shards == 1:
                 return run
 
-            def per_shard(bvh, r):
-                rec = run(bvh, r)
+            def per_shard(ctx, r):
+                rec = run(ctx, r)
                 # lift the scalar round count to a length-1 row axis so the
                 # shard_map returns one value per shard (reduced below)
                 return rec._replace(rounds=jnp.atleast_1d(rec.rounds))
@@ -636,8 +761,8 @@ class QueryEngine:
             return shard_rows_ctx(per_shard, plan.mesh)
 
         fn = self._compiled(key, build_fn)
-        bvh = self._placed_scene(plan).bvh
-        outs = [fn(bvh, block) for block in split_blocks(rays, plan)]
+        ctx = self._trace_ctx(name, prepare, plan)
+        outs = [fn(ctx, block) for block in split_blocks(rays, plan)]
         # streamed assembly: per-ray rows concatenate across chunks; the
         # batch-level round count is the max over chunks and shards, which
         # equals the single-device value (a ray is active for exactly

@@ -4,6 +4,7 @@ from .common import LANES, round_stage  # noqa: F401
 from .raybox import raybox_pallas  # noqa: F401
 from .raytri import raytri_pallas  # noqa: F401
 from .distance import angular_pallas, distance_pallas, norms_pallas  # noqa: F401
+from .traverse import traverse_fused  # noqa: F401
 from .unified import unified_pallas  # noqa: F401
 from .ops import (  # noqa: F401
     angular_kernel,

@@ -115,6 +115,16 @@ def ceil_to(x: int, m: int) -> int:
     return -(-x // m) * m
 
 
+def pad_cols(x: jax.Array, n_to: int, value=0.0) -> jax.Array:
+    """Pad the last (lane) axis to ``n_to`` columns with a constant —
+    the shared job-count padding every kernel wrapper applies."""
+    pad = n_to - x.shape[-1]
+    if pad == 0:
+        return x
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)],
+                   constant_values=value)
+
+
 def resolve_interpret(interpret: bool | None) -> bool:
     """The kernels' ``interpret=None`` default means *auto*: interpret mode
     off-TPU (the only thing the CPU backend supports), compiled Mosaic on a

@@ -45,18 +45,12 @@ from .common import (
     ROW_VEC_A,
     ROW_VEC_B,
     ceil_to,
+    pad_cols,
 )
 from .distance import angular_pallas, distance_pallas
 from .raybox import raybox_pallas
 from .raytri import raytri_pallas
 from .unified import unified_pallas
-
-
-def _pad_cols(x: jax.Array, n_to: int, value=0.0) -> jax.Array:
-    pad = n_to - x.shape[-1]
-    if pad == 0:
-        return x
-    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)], constant_values=value)
 
 
 # ---------------------------------------------------------------------------
@@ -69,11 +63,11 @@ def ray_box_kernel(ray: Ray, boxes: Box, *, interpret=None) -> QuadBoxResult:
     """Kernel-backed ray-vs-4-AABB test.  ray fields (N,·); boxes (N,4,3)."""
     n = ray.origin.shape[0]
     n_pad = ceil_to(max(n, 1), LANES)
-    org = _pad_cols(ray.origin.T, n_pad)  # (3, N')
-    inv = _pad_cols(ray.inv.T, n_pad, 1.0)
-    neg = _pad_cols(jnp.signbit(ray.direction).astype(jnp.float32).T, n_pad)
-    lo = _pad_cols(boxes.lo.reshape(n, 12).T, n_pad)  # (12, N') rows: box-major
-    hi = _pad_cols(boxes.hi.reshape(n, 12).T, n_pad)
+    org = pad_cols(ray.origin.T, n_pad)  # (3, N')
+    inv = pad_cols(ray.inv.T, n_pad, 1.0)
+    neg = pad_cols(jnp.signbit(ray.direction).astype(jnp.float32).T, n_pad)
+    lo = pad_cols(boxes.lo.reshape(n, 12).T, n_pad)  # (12, N') rows: box-major
+    hi = pad_cols(boxes.hi.reshape(n, 12).T, n_pad)
     tmin, idx, hit = raybox_pallas(org, inv, neg, lo, hi, interpret=interpret)
     return QuadBoxResult(tmin=tmin.T[:n], box_index=idx.T[:n],
                          is_intersect=hit.T[:n].astype(bool))
@@ -89,12 +83,12 @@ def ray_triangle_kernel(ray: Ray, tri: Triangle, *, interpret=None) -> TriangleR
     """Kernel-backed watertight ray-triangle test.  All batched (N, ·)."""
     n = ray.origin.shape[0]
     n_pad = ceil_to(max(n, 1), LANES)
-    org = _pad_cols(ray.origin.T, n_pad)
-    shear = _pad_cols(ray.shear.T, n_pad, 1.0)
-    k = _pad_cols(jnp.stack([ray.kx, ray.ky, ray.kz]).astype(jnp.float32), n_pad)
-    va = _pad_cols(tri.a.T, n_pad)
-    vb = _pad_cols(tri.b.T, n_pad)
-    vc = _pad_cols(tri.c.T, n_pad)
+    org = pad_cols(ray.origin.T, n_pad)
+    shear = pad_cols(ray.shear.T, n_pad, 1.0)
+    k = pad_cols(jnp.stack([ray.kx, ray.ky, ray.kz]).astype(jnp.float32), n_pad)
+    va = pad_cols(tri.a.T, n_pad)
+    vb = pad_cols(tri.b.T, n_pad)
+    vc = pad_cols(tri.c.T, n_pad)
     t_num, t_denom, hit = raytri_pallas(org, shear, k, va, vb, vc,
                                         interpret=interpret)
     return TriangleResult(t_num=t_num[0, :n], t_denom=t_denom[0, :n],

@@ -11,6 +11,20 @@ if os.path.abspath(SRC) not in sys.path:
     sys.path.insert(0, os.path.abspath(SRC))
 
 
+def pytest_addoption(parser):
+    parser.addoption(
+        "--regen-goldens", action="store_true", default=False,
+        help="regenerate tests/golden/*.npz from the wavefront oracle "
+             "(then re-run without the flag to verify; see "
+             "tests/golden/README.md)")
+
+
+@pytest.fixture
+def regen_goldens(request):
+    """Whether this run should rewrite the golden-trace fixtures."""
+    return request.config.getoption("--regen-goldens")
+
+
 def make_test_mesh(axis_shape, axis_names):
     """Version-tolerant mesh construction.
 

@@ -54,6 +54,26 @@ def test_plan_per_shard_lane_padding():
     assert plan.key == (4, 32)
 
 
+def test_plan_backend_lane_multiple():
+    """A backend-declared tile width (the fused Pallas traversal's
+    128-lane tiles) raises the per-shard multiple to
+    ``max(pad_multiple, lane_multiple)`` so kernels always receive whole
+    tiles — per shard, per chunk."""
+    plan = make_plan(50, pad_multiple=8, lane_multiple=128)
+    assert (plan.block, plan.n_blocks) == (128, 1)
+    # composes with sharding: every shard gets a whole tile
+    plan = make_plan(50, pad_multiple=8, shards=4, lane_multiple=128)
+    assert (plan.block, plan.shards) == (4 * 128, 4)
+    # composes with chunking: a sub-tile chunk_size still yields one tile
+    plan = make_plan(300, pad_multiple=8, chunk_size=16, lane_multiple=128)
+    assert (plan.block, plan.n_blocks) == (128, 3)
+    # a pad_multiple above the tile width wins (max, not override)
+    plan = make_plan(50, pad_multiple=256, lane_multiple=128)
+    assert plan.block == 256
+    # None = unchanged legacy behavior
+    assert make_plan(50, pad_multiple=8, lane_multiple=None).block == 56
+
+
 def test_plan_validation():
     with pytest.raises(ValueError, match="n >= 1"):
         make_plan(0, pad_multiple=8)

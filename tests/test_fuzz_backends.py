@@ -8,7 +8,10 @@ with hypothesis-generated random scenes / rays / databases:
   (``"lbvh"`` / ``"sah"``, drawn as a hypothesis parameter) against the
   per-ray / free-function oracles (``trace_rays``, ``trace_wavefront``)
   on that builder's own tree, bit for bit including the per-ray job
-  counters and the batch round count;
+  counters and the batch round count — including the fused Pallas
+  traversal kernel (``backend="pallas"``, interpret mode off-TPU), which
+  shares the ``core/datapath`` stage helpers and so carries no ulp
+  caveat, unlike the tiled distance kernels below;
 * every distance backend × metric against the jitted free functions fed
   precomputed ``||c||^2`` — bit-exact for the MXU form, and for the Pallas
   tiled accumulator the documented score caveat (rank-equivalent
@@ -103,6 +106,14 @@ def test_fuzz_trace_backends_bitmatch_oracles(scene_seed, n_tri, builder,
                                          backend="wavefront"),
         "engine/wavefront/chunked": chunked.trace(rays, ray_type=ray_type,
                                                   backend="wavefront"),
+        # the fused Pallas traversal (interpret mode off-TPU) carries NO
+        # score caveat, unlike the tiled distance kernels: it calls the
+        # same core/datapath stage helpers as the wavefront engine, so
+        # hits AND job counters are compared bit-for-bit
+        "engine/pallas": engine.trace(rays, ray_type=ray_type,
+                                      backend="pallas"),
+        "engine/pallas/chunked": chunked.trace(rays, ray_type=ray_type,
+                                               backend="pallas"),
     }
     if ray_type == "closest":
         # the vmapped per-ray while_loop is the semantic oracle: the
@@ -242,6 +253,22 @@ def check(seed, n_tri, ray_seed, n_rays, ray_type):
     assert int(got.rounds) == int(ref.rounds)
 
 check()
+
+# fused Pallas traversal on the same 8-way mesh: fixed cases (the kernel
+# pads each shard to its 128-lane tile, so one shape covers them all)
+single, sharded = scene_pair(0, 230)
+for ray_seed, ray_type in ((7, "closest"), (8, "any"), (9, "shadow")):
+    rng = np.random.default_rng(ray_seed)
+    org = rng.uniform(-3, -2, (40, 3)).astype(np.float32)
+    tgt = rng.uniform(-0.6, 0.6, (40, 3)).astype(np.float32)
+    rays = make_ray(jnp.asarray(org), jnp.asarray(tgt - org))
+    ref = single.trace(rays, ray_type=ray_type, backend="wavefront")
+    got = sharded.trace(rays, ray_type=ray_type, backend="pallas")
+    for f in FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(got, f)),
+                                      np.asarray(getattr(ref, f)),
+                                      err_msg=f"pallas {ray_type}: {f}")
+    assert int(got.rounds) == int(ref.rounds)
 print("sharded trace fuzz OK")
 """, n_devices=8)
 

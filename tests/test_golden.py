@@ -1,0 +1,166 @@
+"""Golden-trace regression suite: every backend vs *stored* expectations.
+
+The pairwise parity tests (``test_session.py``, ``test_fuzz_backends.py``)
+pin backends to each other — which cannot catch *silent arithmetic drift*
+where both sides move together (a datapath stage helper edited, an XLA
+upgrade changing contraction, a BVH builder reordering leaves).  This
+suite pins every registered trace backend × ray type × builder against
+hit records and job counters serialized at a known-good commit:
+
+* ``tests/golden/<scene>.npz`` holds a small canonical scene (triangle
+  soup + deterministic ray batch) and, per (builder, ray_type), the
+  expected ``t`` / ``tri_index`` / ``hit`` / ``quadbox_jobs`` /
+  ``triangle_jobs`` / ``rounds`` produced by the wavefront oracle.
+* The test traces the stored rays through the session engine with every
+  registered backend and bit-compares everything.
+
+Intentional changes regenerate the fixtures::
+
+    PYTHONPATH=src python -m pytest tests/test_golden.py --regen-goldens
+    PYTHONPATH=src python -m pytest tests/test_golden.py   # verify
+
+(see ``tests/golden/README.md``; review the diff before committing — a
+golden change IS a behavior change).
+"""
+import os
+import zlib
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import Scene, make_ray, trace_backends
+from repro.core import Triangle
+from repro.core.session import trace_backend_ray_types
+from repro.core.wavefront import RAY_TYPES, trace_wavefront
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+BUILDERS = ("lbvh", "sah")
+FIELDS = ("t", "tri_index", "hit", "quadbox_jobs", "triangle_jobs")
+SCENES = ("tetra", "sheet", "cluster")
+
+
+# ---------------------------------------------------------------------------
+# Canonical scenes + deterministic ray streams (small on purpose: goldens
+# are committed binaries, and a handful of rays per branchy scene already
+# covers hit/miss/extent/epsilon paths)
+# ---------------------------------------------------------------------------
+
+
+def _scene_triangles(name: str) -> np.ndarray:
+    """(N, 3verts, 3) float32 vertices for a named canonical scene."""
+    if name == "tetra":  # 4 exact-coordinate faces: the minimal closed solid
+        v = np.asarray([[1, 1, 1], [1, -1, -1], [-1, 1, -1], [-1, -1, 1]],
+                       np.float32)
+        faces = [(0, 1, 2), (0, 3, 1), (0, 2, 3), (1, 3, 2)]
+        return np.stack([np.stack([v[a], v[b], v[c]]) for a, b, c in faces])
+    if name == "sheet":  # regular 4x4 quad grid split into 32 triangles:
+        # axis-aligned geometry exercises the 0*inf slab boundaries
+        tris = []
+        for i in range(4):
+            for j in range(4):
+                x0, x1 = i - 2.0, i - 1.0
+                y0, y1 = j - 2.0, j - 1.0
+                a, b = [x0, y0, 0.0], [x1, y0, 0.0]
+                c, d = [x1, y1, 0.0], [x0, y1, 0.0]
+                tris += [[a, b, c], [a, c, d]]
+        return np.asarray(tris, np.float32)
+    if name == "cluster":  # the canonical non-uniform quality workload
+        from repro.core.build.quality import clustered_soup
+        tri = clustered_soup(np.random.default_rng(42), n_clusters=4,
+                             per_cluster=30)
+        return np.stack([np.asarray(tri.a), np.asarray(tri.b),
+                         np.asarray(tri.c)], axis=1)
+    raise ValueError(name)
+
+
+def _scene_rays(name: str, tris: np.ndarray):
+    """A deterministic mixed ray stream: hits, misses, finite extents."""
+    rng = np.random.default_rng(zlib.crc32(name.encode()))  # stable seed
+    n = 40
+    center = tris.reshape(-1, 3).mean(0)
+    span = np.abs(tris.reshape(-1, 3) - center).max() + 1.0
+    org = (center + rng.uniform(-1, 1, (n, 3)) * 3 * span).astype(np.float32)
+    tgt = (center + rng.uniform(-0.5, 0.5, (n, 3)) * span).astype(np.float32)
+    extent = np.where(rng.uniform(size=n) < 0.4,
+                      rng.uniform(0.5, 4.0, n) * span, np.inf)
+    return org, (tgt - org).astype(np.float32), extent.astype(np.float32)
+
+
+def _golden_path(name: str) -> str:
+    return os.path.join(GOLDEN_DIR, f"{name}.npz")
+
+
+def _generate(name: str) -> dict:
+    """Scene + rays + wavefront-oracle expectations for every
+    (builder, ray_type) — the free function, not the engine, so the
+    goldens are anchored below the session layer."""
+    tris = _scene_triangles(name)
+    org, dirs, extent = _scene_rays(name, tris)
+    rays = make_ray(jnp.asarray(org), jnp.asarray(dirs),
+                    extent=jnp.asarray(extent))
+    data = {"tris": tris, "ray_org": org, "ray_dir": dirs,
+            "ray_extent": extent}
+    for builder in BUILDERS:
+        scene = Scene.from_triangles(
+            Triangle(jnp.asarray(tris[:, 0]), jnp.asarray(tris[:, 1]),
+                     jnp.asarray(tris[:, 2])), builder=builder)
+        for ray_type in RAY_TYPES:
+            rec = trace_wavefront(scene.bvh, rays, scene.depth,
+                                  ray_type=ray_type)
+            for f in FIELDS:
+                data[f"{builder}__{ray_type}__{f}"] = np.asarray(
+                    getattr(rec, f))
+            data[f"{builder}__{ray_type}__rounds"] = np.asarray(rec.rounds)
+    return data
+
+
+@pytest.mark.parametrize("scene_name", SCENES)
+def test_golden_traces(scene_name, regen_goldens):
+    path = _golden_path(scene_name)
+    if regen_goldens:
+        os.makedirs(GOLDEN_DIR, exist_ok=True)
+        np.savez_compressed(path, **_generate(scene_name))
+    if not os.path.exists(path):
+        pytest.fail(f"missing golden fixture {path}; generate it with "
+                    "pytest tests/test_golden.py --regen-goldens")
+    data = np.load(path)
+
+    tris = data["tris"]
+    rays = make_ray(jnp.asarray(data["ray_org"]),
+                    jnp.asarray(data["ray_dir"]),
+                    extent=jnp.asarray(data["ray_extent"]))
+    for builder in BUILDERS:
+        scene = Scene.from_triangles(
+            Triangle(jnp.asarray(tris[:, 0]), jnp.asarray(tris[:, 1]),
+                     jnp.asarray(tris[:, 2])), builder=builder)
+        engine = scene.engine(pad_multiple=8, shard=1)
+        for ray_type in RAY_TYPES:
+            expected = {f: data[f"{builder}__{ray_type}__{f}"]
+                        for f in FIELDS}
+            exp_rounds = int(data[f"{builder}__{ray_type}__rounds"])
+            for backend in trace_backends():
+                if ray_type not in trace_backend_ray_types(backend):
+                    continue
+                got = engine.trace(rays, ray_type=ray_type, backend=backend)
+                for f in FIELDS:
+                    np.testing.assert_array_equal(
+                        np.asarray(getattr(got, f)), expected[f],
+                        err_msg=(f"golden drift: {scene_name}/{builder}/"
+                                 f"{ray_type}/{backend}: {f}"))
+                assert int(got.rounds) == exp_rounds, (
+                    f"golden drift: {scene_name}/{builder}/{ray_type}/"
+                    f"{backend}: rounds")
+
+
+def test_golden_fixtures_self_describing():
+    """Every committed fixture carries the scene + rays it was traced
+    with, so a drift report can be reproduced standalone."""
+    for scene_name in SCENES:
+        path = _golden_path(scene_name)
+        if not os.path.exists(path):
+            pytest.skip("goldens not generated yet")
+        data = np.load(path)
+        for key in ("tris", "ray_org", "ray_dir", "ray_extent"):
+            assert key in data, f"{path} missing {key}"
+        assert data["tris"].dtype == np.float32

@@ -1,4 +1,13 @@
-"""Hypothesis property tests on the datapath's invariants."""
+"""Hypothesis property tests: datapath invariants + metamorphic traversal.
+
+The first half checks algebraic invariants of single datapath stages.
+The second half is *metamorphic*: instead of comparing a backend to an
+oracle (which cannot catch a bug both sides share), it compares a
+traversal to a transformed re-statement of the same question — triangle
+permutation, rigid translation, extent monotonicity — across trace
+backends (wavefront / fused pallas) and acceleration-structure builders
+(lbvh / sah), all drawn as hypothesis parameters.
+"""
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -6,7 +15,8 @@ import pytest
 pytest.importorskip("hypothesis", reason="install via requirements-dev.txt")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import (Box, make_ray, quadsort, ray_box_test,
+from repro.api import Scene, make_ray  # noqa: E402
+from repro.core import (Box, Triangle, quadsort, ray_box_test,  # noqa: E402
                         euclidean_distance_sq, angular_distance_parts)
 
 # subnormals excluded: XLA (CPU and TPU alike) flushes them to zero, so a
@@ -88,3 +98,132 @@ def test_mask_equals_truncation(seed, dim):
     full = euclidean_partial(jnp.asarray(a), jnp.asarray(b), mask)
     trunc = ((a[:dim] - b[:dim]) ** 2).sum()
     np.testing.assert_allclose(np.asarray(full), trunc, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Metamorphic traversal properties (backends × builders)
+# ---------------------------------------------------------------------------
+
+TRACE_BACKENDS = ("wavefront", "pallas")
+BUILDERS = ("lbvh", "sah")
+SCENE_SEEDS = (0, 1)
+N_TRI = (7, 60)
+
+_scenes: dict = {}
+
+
+def _soup(seed, n_tri):
+    rng = np.random.default_rng(5000 * seed + n_tri)
+    ctr = rng.uniform(-1, 1, (n_tri, 3)).astype(np.float32)
+    d1 = rng.normal(scale=0.2, size=(n_tri, 3)).astype(np.float32)
+    d2 = rng.normal(scale=0.2, size=(n_tri, 3)).astype(np.float32)
+    return np.stack([ctr, ctr + d1, ctr + d2], axis=1)  # (N, 3verts, 3)
+
+
+def _engine(key, verts, builder):
+    """Scene+engine cache so hypothesis examples share compiled traces."""
+    if key not in _scenes:
+        scene = Scene.from_triangles(
+            Triangle(jnp.asarray(verts[:, 0]), jnp.asarray(verts[:, 1]),
+                     jnp.asarray(verts[:, 2])), builder=builder)
+        _scenes[key] = scene.engine(pad_multiple=8, shard=1)
+    return _scenes[key]
+
+
+def _probe_rays(seed, n_rays=16):
+    rng = np.random.default_rng(9000 + seed)
+    org = rng.uniform(-3, -2, (n_rays, 3)).astype(np.float32)
+    tgt = rng.uniform(-0.6, 0.6, (n_rays, 3)).astype(np.float32)
+    return org, (tgt - org).astype(np.float32)
+
+
+@given(seed=st.sampled_from(SCENE_SEEDS), n_tri=st.sampled_from(N_TRI),
+       builder=st.sampled_from(BUILDERS),
+       backend=st.sampled_from(TRACE_BACKENDS),
+       perm_seed=st.sampled_from((0, 1, 2)))
+@settings(max_examples=20, deadline=None)
+def test_closest_hit_invariant_under_triangle_permutation(
+        seed, n_tri, builder, backend, perm_seed):
+    """Shuffling the soup must not change what a ray hits: ``t`` is the
+    min over the same per-triangle tests (bit-equal), and the winning
+    triangle is the same one modulo the permutation's index remap.  The
+    tree differs completely (different Morton/SAH order), so this is a
+    real end-to-end property, not a cache artifact."""
+    verts = _soup(seed, n_tri)
+    perm = np.random.default_rng(perm_seed).permutation(n_tri)
+    e1 = _engine(("perm-base", seed, n_tri, builder), verts, builder)
+    e2 = _engine(("perm", seed, n_tri, builder, perm_seed), verts[perm],
+                 builder)
+    org, dirs = _probe_rays(seed)
+    rays = make_ray(jnp.asarray(org), jnp.asarray(dirs))
+    r1 = e1.trace(rays, backend=backend)
+    r2 = e2.trace(rays, backend=backend)
+    np.testing.assert_array_equal(np.asarray(r1.hit), np.asarray(r2.hit))
+    np.testing.assert_array_equal(np.asarray(r1.t), np.asarray(r2.t))
+    hit = np.asarray(r1.hit)
+    # scene2's index j holds original triangle perm[j]
+    np.testing.assert_array_equal(perm[np.asarray(r2.tri_index)[hit]],
+                                  np.asarray(r1.tri_index)[hit])
+
+
+@given(seed=st.sampled_from(SCENE_SEEDS), n_tri=st.sampled_from(N_TRI),
+       builder=st.sampled_from(BUILDERS),
+       backend=st.sampled_from(TRACE_BACKENDS),
+       shift=st.sampled_from(((1.0, -2.0, 0.5), (4.0, 4.0, -8.0),
+                              (-0.25, 2.0, 1.0))))
+@settings(max_examples=20, deadline=None)
+def test_closest_hit_invariant_under_rigid_translation(
+        seed, n_tri, builder, backend, shift):
+    """Translating scene and ray origins together is a no-op up to fp
+    rounding of the shifted coordinates: same hit set, same winning
+    triangle, distances equal to a tight tolerance (exact equality is
+    deliberately NOT asserted — the translation itself rounds)."""
+    verts = _soup(seed, n_tri)
+    t_vec = np.asarray(shift, np.float32)
+    e1 = _engine(("shift-base", seed, n_tri, builder), verts, builder)
+    e2 = _engine(("shift", seed, n_tri, builder, shift), verts + t_vec,
+                 builder)
+    org, dirs = _probe_rays(seed)
+    rays1 = make_ray(jnp.asarray(org), jnp.asarray(dirs))
+    rays2 = make_ray(jnp.asarray(org + t_vec), jnp.asarray(dirs))
+    r1 = e1.trace(rays1, backend=backend)
+    r2 = e2.trace(rays2, backend=backend)
+    np.testing.assert_array_equal(np.asarray(r1.hit), np.asarray(r2.hit))
+    hit = np.asarray(r1.hit)
+    np.testing.assert_array_equal(np.asarray(r1.tri_index)[hit],
+                                  np.asarray(r2.tri_index)[hit])
+    np.testing.assert_allclose(np.asarray(r2.t)[hit],
+                               np.asarray(r1.t)[hit], rtol=1e-3, atol=1e-3)
+
+
+@given(seed=st.sampled_from(SCENE_SEEDS), n_tri=st.sampled_from(N_TRI),
+       builder=st.sampled_from(BUILDERS),
+       backend=st.sampled_from(TRACE_BACKENDS),
+       ray_seed=st.integers(0, 2**31 - 1),
+       extent=st.floats(0.5, 8.0, allow_nan=False, width=32))
+@settings(max_examples=25, deadline=None)
+def test_shadow_implies_any_hit_monotone_in_extent(
+        seed, n_tri, builder, backend, ray_seed, extent):
+    """Occlusion is monotone: a ``shadow`` hit (t >= epsilon) implies an
+    ``any`` hit at the same extent (the epsilon only *discards* hits),
+    and an ``any`` hit within extent e implies one within 2e (a larger
+    search interval is a superset).  Exact set containment — no
+    tolerances — for every backend and builder."""
+    verts = _soup(seed, n_tri)
+    engine = _engine(("mono", seed, n_tri, builder), verts, builder)
+    rng = np.random.default_rng(ray_seed)
+    org = rng.uniform(-3, -2, (16, 3)).astype(np.float32)
+    tgt = rng.uniform(-0.6, 0.6, (16, 3)).astype(np.float32)
+    dirs = (tgt - org).astype(np.float32)
+    near = make_ray(jnp.asarray(org), jnp.asarray(dirs),
+                    extent=jnp.full((16,), extent, jnp.float32))
+    far = make_ray(jnp.asarray(org), jnp.asarray(dirs),
+                   extent=jnp.full((16,), 2.0 * extent, jnp.float32))
+    shadow = np.asarray(engine.trace(near, ray_type="shadow",
+                                     backend=backend).hit)
+    any_near = np.asarray(engine.trace(near, ray_type="any",
+                                       backend=backend).hit)
+    any_far = np.asarray(engine.trace(far, ray_type="any",
+                                      backend=backend).hit)
+    assert not (shadow & ~any_near).any(), "shadow hit without any-hit"
+    assert not (any_near & ~any_far).any(), "any-hit lost at larger extent"

@@ -63,6 +63,9 @@ SCENES = [(7, 230, 64), (17, 3, 32)]  # random soup + root-is-leaf-parent
     ("wavefront", "closest"),
     ("wavefront", "any"),
     ("wavefront", "shadow"),
+    ("pallas", "closest"),
+    ("pallas", "any"),
+    ("pallas", "shadow"),
 ])
 def test_trace_bitmatches_legacy(seed, n_tri, n_rays, backend, ray_type):
     scene, rays = _scene_and_rays(seed, n_tri, n_rays)
@@ -71,17 +74,19 @@ def test_trace_bitmatches_legacy(seed, n_tri, n_rays, backend, ray_type):
     if backend == "per_ray":
         ref = trace_rays(scene.bvh, rays, scene.depth)
     else:
+        # the wavefront free function is the oracle for both the batch
+        # engine and the fused Pallas kernel (shared stage helpers)
         ref = trace_wavefront(scene.bvh, rays, scene.depth,
                               ray_type=ray_type)
     for field in TRACE_FIELDS:
         np.testing.assert_array_equal(
             np.asarray(getattr(got, field)),
             np.asarray(getattr(ref, field)), err_msg=field)
-    if backend == "wavefront":
-        assert int(got.rounds) == int(ref.rounds)
-    else:
+    if backend == "per_ray":
         # per-ray oracle reports the equivalent batch-round count
         assert int(got.rounds) == int(np.asarray(ref.quadbox_jobs).max())
+    else:
+        assert int(got.rounds) == int(ref.rounds)
 
 
 @pytest.mark.parametrize("ray_type", ["closest", "any", "shadow"])
@@ -122,21 +127,43 @@ def test_trace_backend_validation():
     with pytest.raises(ValueError, match="no Scene"):
         QueryEngine().trace(rays)
     assert "per_ray" in trace_backends() and "wavefront" in trace_backends()
+    assert "pallas" in trace_backends()
+
+
+def test_trace_backend_registry_metadata():
+    """The registry knows each backend's ray types and the fused kernel's
+    lane multiple matches the kernel's actual tile width."""
+    from repro.core.session import PALLAS_TRACE_LANES, trace_backend_ray_types
+    from repro.kernels.common import LANES
+
+    assert PALLAS_TRACE_LANES == LANES
+    assert trace_backend_ray_types("per_ray") == ("closest",)
+    assert set(trace_backend_ray_types("pallas")) == {"closest", "any",
+                                                      "shadow"}
+    assert set(trace_backend_ray_types("wavefront")) == {"closest", "any",
+                                                         "shadow"}
+    with pytest.raises(ValueError, match="unknown trace backend"):
+        trace_backend_ray_types("warp")
 
 
 def test_auto_backend_policy():
     scene, rays = _scene_and_rays(11, 100, 8)
     engine = scene.engine()
+    # off-TPU the batch engine wins; on TPU the fused kernel keeps the
+    # loop state on-chip (all three bit-match, so the policy is pure
+    # scheduling)
+    batch = "pallas" if jax.default_backend() == "tpu" else "wavefront"
     assert engine.resolve_trace_backend("closest", 4) == "per_ray"
-    assert engine.resolve_trace_backend("closest", 500) == "wavefront"
-    assert engine.resolve_trace_backend("shadow", 4) == "wavefront"
-    # queries the per-ray oracle cannot express route to wavefront, so a
-    # tiny closest-hit batch with an epsilon/round cap must still work
-    assert engine.resolve_trace_backend("closest", 4, t_min=1e-3) == "wavefront"
+    assert engine.resolve_trace_backend("closest", 500) == batch
+    assert engine.resolve_trace_backend("shadow", 4) == batch
+    # queries the per-ray oracle cannot express route to the batch
+    # engine, so a tiny closest-hit batch with an epsilon/round cap must
+    # still work
+    assert engine.resolve_trace_backend("closest", 4, t_min=1e-3) == batch
     assert engine.resolve_trace_backend("closest", 4,
-                                        max_rounds=2) == "wavefront"
+                                        max_rounds=2) == batch
     # ...and so does any sharded batch (a multi-device frontier is not tiny)
-    assert engine.resolve_trace_backend("closest", 4, shards=2) == "wavefront"
+    assert engine.resolve_trace_backend("closest", 4, shards=2) == batch
     small = jax.tree_util.tree_map(lambda x: x[:4], rays)
     rec = engine.trace(small, t_min=1e-3)  # auto: must not hit per_ray
     assert rec.t.shape == (4,)
@@ -152,6 +179,53 @@ def test_auto_backend_policy():
     # ...and a per-call backend="auto" re-enables it
     forced.trace(small, backend="auto")
     assert any(key[1] == "per_ray" for key in forced._cache)
+
+
+def test_pallas_prepared_ctx_cached_per_version():
+    """The fused backend's packed BVH operands are prepared once per
+    scene version (not per chunk/call) through one jitted prepare
+    function; a refit evicts the stale version's ctx and re-packs with
+    zero new compiles."""
+    from repro.core import Triangle as Tri
+
+    scene, rays = _scene_and_rays(7, 230, 64)
+    engine = scene.engine(pad_multiple=8, shard=1, chunk_size=16)
+    a = engine.trace(rays, backend="pallas")  # 4 chunks, 1 prepare
+    misses0 = engine.cache_info().misses
+    keys = [k for k in engine._placed if k[0] == "trace_ctx"]
+    assert len(keys) == 1 and keys[0][3] == 0  # (kind, name, shards, ver)
+    ctx0 = engine._placed[keys[0]]
+    engine.trace(rays, backend="pallas")
+    assert engine.cache_info().misses == misses0  # fully cached
+    assert engine._placed[keys[0]] is ctx0  # same prepared operands
+    tri = scene.bvh.triangles
+    scene.refit(Tri(tri.a + 0.25, tri.b + 0.25, tri.c + 0.25))
+    b = engine.trace(rays, backend="pallas")
+    assert engine.cache_info().misses == misses0  # zero-retrace refit
+    keys = [k for k in engine._placed if k[0] == "trace_ctx"]
+    assert len(keys) == 1 and keys[0][3] == 1  # old version evicted
+    ref = trace_wavefront(scene.bvh, rays, scene.depth)
+    for field in TRACE_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(b, field)),
+                                      np.asarray(getattr(ref, field)),
+                                      err_msg=field)
+
+
+def test_auto_backend_tpu_routes_to_fused_kernel_within_budget(monkeypatch):
+    """On TPU, "auto" batch traces go to the fused Pallas kernel — but
+    only while the scene's resident operands (mapped whole into every
+    kernel tile) fit the on-chip budget; past it the wavefront engine
+    keeps serving the scene unchanged."""
+    scene, _ = _scene_and_rays(11, 100, 8)
+    engine = scene.engine()
+    assert engine._scene_resident_bytes() > 0
+    assert QueryEngine(index=None)._scene_resident_bytes() == 0
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    assert engine.resolve_trace_backend("closest", 500) == "pallas"
+    assert engine.resolve_trace_backend("shadow", 4) == "pallas"
+    assert engine.resolve_trace_backend("closest", 4) == "per_ray"  # tiny
+    monkeypatch.setattr(engine, "AUTO_PALLAS_SCENE_BYTES", 0)
+    assert engine.resolve_trace_backend("closest", 500) == "wavefront"
 
 
 # ---------------------------------------------------------------------------
