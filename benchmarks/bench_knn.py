@@ -9,6 +9,13 @@ ratio is the speedup "reusing the MXU" buys over lane-serial processing.
 Every row carries ``devices=`` / ``chunk_size=``; on a multi-device host a
 sharded-vs-single-device comparison section is appended (queries
 data-parallel over the mesh, database replicated — ``core/dispatch.py``).
+
+The tree-vs-brute section benchmarks the traversal-backed neighbor path
+(DESIGN.md §9): a ``PointCloudScene`` per cloud size, fixed-radius
+``within`` through the BVH wavefront engine vs the brute MXU matmul, with
+the per-query traversal work (``box_jobs + point_jobs``) and the measured
+radius selectivity in the derived metrics — the RTNN trade curve
+(tree wins as selectivity drops, brute wins as it saturates).
 """
 from __future__ import annotations
 
@@ -18,7 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import VectorIndex
+from repro.api import PointCloudScene, VectorIndex
 from repro.core import euclidean_distance_sq
 
 
@@ -87,3 +94,37 @@ def run(rows):
                      f"queries_per_s={m / dt_sh:.3e};"
                      f"speedup_vs_single={dt_knn / dt_sh:.2f}x;"
                      f"devices={n_dev};chunk_size=none"))
+
+    # -- tree-vs-brute neighbor search (the RTNN trade curve) ---------------
+    mq, kq = 256, 64
+    cq = jnp.asarray(rng.normal(size=(mq, 3)).astype(np.float32))
+    for n_pts in (4096, 32768):
+        pts = jnp.asarray(rng.normal(size=(n_pts, 3)).astype(np.float32))
+        ceng = PointCloudScene.from_points(pts).engine(shard=1)
+        for radius in (0.15, 0.6):
+            rec = jax.block_until_ready(ceng.neighbor_search(
+                cq, kq, radius=radius, backend="tree_wavefront"))
+            sel = float(np.asarray(rec.count).mean()) / n_pts
+            jobs = float(np.asarray(rec.box_jobs).mean()
+                         + np.asarray(rec.point_jobs).mean())
+            dt_tree = _t(lambda qq: ceng.neighbor_search(
+                qq, kq, radius=radius, backend="tree_wavefront"), cq)
+            dt_brute = _t(lambda qq: ceng.within(
+                qq, radius, kq, backend="mxu"), cq)
+            rows.append((
+                f"within_tree_n{n_pts}_r{radius}", dt_tree * 1e6,
+                f"queries_per_s={mq / dt_tree:.3e};"
+                f"brute_mxu_us={dt_brute * 1e6:.3f};"
+                f"tree_speedup_vs_brute={dt_brute / dt_tree:.2f}x;"
+                f"jobs_per_query={jobs:.1f};"
+                f"brute_jobs_per_query={n_pts};"
+                f"selectivity={sel:.3e};devices=1;chunk_size=none"))
+        dt_tn = _t(lambda qq: ceng.nearest(
+            qq, 8, backend="tree_wavefront"), cq)
+        dt_bn = _t(lambda qq: ceng.nearest(qq, 8, backend="mxu"), cq)
+        rows.append((
+            f"nearest8_tree_n{n_pts}", dt_tn * 1e6,
+            f"queries_per_s={mq / dt_tn:.3e};"
+            f"brute_mxu_us={dt_bn * 1e6:.3f};"
+            f"tree_speedup_vs_brute={dt_bn / dt_tn:.2f}x;"
+            f"devices=1;chunk_size=none"))

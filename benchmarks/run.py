@@ -65,26 +65,35 @@ def main():
     from . import bench_build, bench_datapath, bench_knn, bench_traversal
 
     rows: list[tuple] = []
-    bench_datapath.run(rows)
-    bench_traversal.run(rows)
-    bench_build.run(rows)
-    bench_knn.run(rows)
-    if not args.quick:
-        from . import bench_models
-        bench_models.run(rows)
 
-    print("name,us_per_call,derived")
-    for name, us, derived in rows:
-        print(f"{name},{us:.3f},{derived}")
-
-    if args.json:
+    def flush():
+        # incremental JSON: rewrite after every section so a crash in a
+        # later benchmark still leaves the completed rows on disk (CI
+        # uploads the file unconditionally — a partial trajectory beats
+        # an empty artifact)
+        if not args.json:
+            return
         payload = [{"name": name, "us_per_call": round(us, 3),
                     "derived": parse_derived(derived)}
                    for name, us, derived in rows]
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
             f.write("\n")
-        print(f"wrote {len(payload)} rows to {args.json}")
+
+    sections = [bench_datapath.run, bench_traversal.run, bench_build.run,
+                bench_knn.run]
+    if not args.quick:
+        from . import bench_models
+        sections.append(bench_models.run)
+    for section in sections:
+        section(rows)
+        flush()
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")
+    if args.json:
+        print(f"wrote {len(rows)} rows to {args.json}")
 
 
 if __name__ == "__main__":

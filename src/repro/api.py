@@ -14,12 +14,25 @@ Build a session once, query it everywhere (DESIGN.md §5):
 
     index = VectorIndex.from_database(embeddings)
     engine = index.engine()
-    scores, idx = engine.nearest(queries, k=8, metric="cosine")
+    res = engine.nearest(queries, k=8, metric="cosine")
+    scores, idx, valid = res.scores, res.indices, res.valid
     in_range = engine.within(queries, radius=5.0, k=16)
 
+3-D point clouds get the traversal-backed neighbor path (DESIGN.md §9):
+the cloud is a BVH of AABB-per-point leaves, query radii ride as ray
+extents, and ``backend="auto"`` picks tree-vs-brute per query::
+
+    cloud = PointCloudScene.from_points(points, builder="lbvh")
+    engine = cloud.engine()
+    near = engine.nearest(queries, k=8)           # tree or brute, same ranks
+    ball = engine.within(queries, radius=0.1, k=32)
+    counts = engine.count_within(queries, radius=0.1)
+    cloud.refit(moved_points)                     # animate: no rebuild
+
 Backends are pluggable (``backend="per_ray" | "wavefront" | "pallas" |
-"mxu" | "auto"``) and every backend returns the same result record; the
-legacy free functions in ``repro.core`` remain the semantic oracles.
+"mxu" | "tree_wavefront" | "tree_pallas" | "auto"``) and every backend
+returns the same result record; the legacy free functions in
+``repro.core`` remain the semantic oracles.
 
 Execution scales without changing results (DESIGN.md §6): pass
 ``shard="auto" | int`` to data-parallel a batch across local devices
@@ -34,11 +47,14 @@ from .core.build import (  # noqa: F401
     TreeStats,
     builders,
     refit,
+    refit_points,
     register_builder,
 )
 from .core.session import (  # noqa: F401
     CacheInfo,
     NearestResult,
+    NeighborRecord,
+    PointCloudScene,
     QueryEngine,
     Scene,
     TraceResult,
@@ -46,7 +62,9 @@ from .core.session import (  # noqa: F401
     WithinResult,
     default_pad_multiple,
     distance_backends,
+    neighbor_backends,
     register_distance_backend,
+    register_neighbor_backend,
     register_trace_backend,
     trace_backends,
 )
@@ -58,6 +76,8 @@ __all__ = [
     "BuildResult",
     "CacheInfo",
     "NearestResult",
+    "NeighborRecord",
+    "PointCloudScene",
     "QueryEngine",
     "RAY_TYPES",
     "Ray",
@@ -72,9 +92,12 @@ __all__ = [
     "default_pad_multiple",
     "distance_backends",
     "make_ray",
+    "neighbor_backends",
     "refit",
+    "refit_points",
     "register_builder",
     "register_distance_backend",
+    "register_neighbor_backend",
     "register_trace_backend",
     "trace_backends",
 ]

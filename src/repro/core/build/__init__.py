@@ -90,6 +90,11 @@ from .quality import (  # noqa: E402,F401
     sah_cost,
     tree_stats,
 )
+from .points import (  # noqa: E402,F401
+    build_point_bvh,
+    point_boxes,
+    refit_points,
+)
 from .refit import refit  # noqa: E402,F401
 
 __all__ = [
@@ -97,10 +102,12 @@ __all__ = [
     "TreeStats",
     "build",
     "build_bvh4",
+    "build_point_bvh",
     "builders",
     "clustered_soup",
     "get_builder",
     "mean_jobs_per_ray",
+    "point_boxes",
     "probe_rays",
     "refit",
     "register_builder",

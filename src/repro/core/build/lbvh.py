@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from ..bvh import BVH4, bvh4_depth, fit_nodes, leaf_arrays, nondegenerate_mask
-from ..types import Triangle, aabb_of_triangles
+from ..types import Box, Triangle, aabb_of_triangles
 from . import register_builder
 
 
@@ -43,15 +43,17 @@ def morton3d(points01: jax.Array) -> jax.Array:
     return (x << 2) | (y << 1) | z
 
 
-@register_builder("lbvh")
-def build_bvh4(tri: Triangle, depth: int | None = None) -> BVH4:
-    """Build a BVH4 over a triangle soup.  ``depth`` must be static if given."""
-    n = tri.a.shape[0]
-    if depth is None:
-        depth = bvh4_depth(n)
-    n_leaves = 4**depth
+def lbvh_leaf_perm(boxes: Box, depth: int) -> jax.Array:
+    """Morton-order leaf-slot assignment over per-primitive AABBs.
 
-    boxes = aabb_of_triangles(tri)
+    The primitive-agnostic core of the LBVH builder: everything up to the
+    leaf-array scatter needs only each primitive's bounding box, so
+    triangle soups and point clouds (:mod:`repro.core.build.points`,
+    whose "boxes" are the points themselves) share it.  Returns the
+    ``(4**depth,)`` slot permutation (-1 = empty pad slot).
+    """
+    n = boxes.lo.shape[0]
+    n_leaves = 4**depth
     centroid = 0.5 * (boxes.lo + boxes.hi)
     scene_lo = jnp.min(boxes.lo, axis=0)
     scene_hi = jnp.max(boxes.hi, axis=0)
@@ -60,7 +62,18 @@ def build_bvh4(tri: Triangle, depth: int | None = None) -> BVH4:
 
     order = jnp.argsort(codes).astype(jnp.int32)  # (N,)
     pad = n_leaves - n
-    leaf_perm = jnp.concatenate([order, jnp.full((pad,), -1, jnp.int32)])
+    return jnp.concatenate([order, jnp.full((pad,), -1, jnp.int32)])
+
+
+@register_builder("lbvh")
+def build_bvh4(tri: Triangle, depth: int | None = None) -> BVH4:
+    """Build a BVH4 over a triangle soup.  ``depth`` must be static if given."""
+    n = tri.a.shape[0]
+    if depth is None:
+        depth = bvh4_depth(n)
+
+    boxes = aabb_of_triangles(tri)
+    leaf_perm = lbvh_leaf_perm(boxes, depth)
     # degenerate cull: zero-area triangles become padded leaves (tri -1,
     # inverted box) so no engine can ever report them as hits
     leaf_tri, leaf_lo, leaf_hi = leaf_arrays(leaf_perm, boxes,

@@ -1,0 +1,119 @@
+"""Point-cloud acceleration structures: AABB-per-point leaves (RTNN).
+
+RTNN's observation is that neighbor search *is* traversal: wrap every
+point in a degenerate AABB (lo == hi == the point), build the usual box
+tree over those leaves, and a fixed-radius query becomes an extent-limited
+walk — exactly the shape the datapath's OpQuadbox/OpEuclidean units
+already serve.  This module maps point clouds onto the repo's existing
+construction subsystem:
+
+* the **leaf-slot assignment** reuses the triangle builders' primitive-
+  agnostic cores (:func:`~repro.core.build.lbvh.lbvh_leaf_perm`,
+  :func:`~repro.core.build.sah.sah_leaf_perm` — both consume only
+  per-primitive boxes/centroids), so LBVH vs SAH stays a quality knob for
+  clouds exactly as for soups;
+* the result is an ordinary :class:`~repro.core.bvh.BVH4` — the point is
+  stored at all three ``triangles`` vertices so every BVH4 consumer
+  (packers, refit, stats plumbing) sees a structurally valid soup, and
+  the neighbor engines read the cloud back as ``bvh.triangles.a``;
+* the one divergence from the triangle path is the **degenerate cull**:
+  a point-leaf is *always* zero-area, so the builders' zero-area mask
+  would cull the entire cloud.  Point builds/refits pass an all-live
+  mask instead (:func:`build_point_bvh` / :func:`refit_points`).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..bvh import BVH4, bvh4_depth, depth_of, fit_nodes, leaf_arrays
+from ..types import Box, Triangle
+from . import BuildResult
+from .lbvh import lbvh_leaf_perm
+from .sah import sah_leaf_perm
+
+# the primitive-agnostic slot-assignment cores shared with the triangle
+# builders (same registry names, so ``builder=`` means the same thing for
+# Scene.from_triangles and PointCloudScene.from_points)
+POINT_BUILDERS = {
+    "lbvh": lbvh_leaf_perm,
+    "sah": sah_leaf_perm,
+}
+
+
+def point_boxes(points: jax.Array) -> Box:
+    """Degenerate AABB per point (lo == hi == the point): the RTNN mapping
+    of a point cloud onto box-tree primitives."""
+    return Box(lo=points, hi=points)
+
+
+def _point_soup(points: jax.Array) -> Triangle:
+    """Store each point at all three vertices so the BVH4 record stays a
+    structurally valid soup; neighbor engines read points as ``.a``."""
+    return Triangle(points, points, points)
+
+
+def _check_points(points: jax.Array, where: str) -> jax.Array:
+    points = jnp.asarray(points, jnp.float32)
+    if points.ndim != 2 or points.shape[-1] != 3:
+        raise ValueError(
+            f"{where}: expected an (N, 3) point cloud, got "
+            f"{tuple(points.shape)} (the tree path is the 3-D RTNN "
+            "mapping; higher-dimensional data stays on the brute path)")
+    return points
+
+
+def build_point_bvh(points: jax.Array, builder: str = "lbvh",
+                    depth: int | None = None) -> BuildResult:
+    """Build a BVH4 over a point cloud with a registered builder core.
+
+    ``depth`` must be static; it defaults to the smallest depth whose
+    ``4**depth`` leaf slots fit the cloud.  Jittable per (size, depth).
+    """
+    points = _check_points(points, "build_point_bvh")
+    n = points.shape[0]
+    if builder not in POINT_BUILDERS:
+        raise ValueError(f"unknown point builder {builder!r} "
+                         f"(registered: {tuple(POINT_BUILDERS)})")
+    if depth is None:
+        depth = bvh4_depth(n)
+    if 4**depth < n:
+        raise ValueError(
+            f"depth={depth} gives {4**depth} leaf slots < {n} points")
+
+    boxes = point_boxes(points)
+    leaf_perm = POINT_BUILDERS[builder](boxes, depth)
+    # every point is live: the triangle zero-area cull must NOT apply
+    # (a point's box is legitimately degenerate)
+    leaf_tri, leaf_lo, leaf_hi = leaf_arrays(leaf_perm, boxes,
+                                             jnp.ones((n,), bool))
+    node_lo, node_hi = fit_nodes(leaf_lo, leaf_hi, depth)
+    bvh = BVH4(node_lo=node_lo, node_hi=node_hi, leaf_tri=leaf_tri,
+               triangles=_point_soup(points), leaf_perm=leaf_perm)
+    return BuildResult(bvh=bvh, builder=builder, depth=depth)
+
+
+def refit_points(bvh: BVH4, points: jax.Array) -> BVH4:
+    """Topology-preserving refit for a moved cloud (same count, same order).
+
+    The triangle :func:`~repro.core.build.refit.refit` re-evaluates the
+    zero-area cull each frame — which would cull every point — so clouds
+    refit through this cull-free twin.  Same zero-retrace contract: all
+    shapes and the leaf permutation are preserved, so a refit BVH4 is
+    pytree-compatible with its build.
+    """
+    points = _check_points(points, "refit_points")
+    n_built = bvh.triangles.a.shape[0]
+    if points.shape[0] != n_built:
+        raise ValueError(
+            f"refit_points needs the built cloud's {n_built} points, got "
+            f"{points.shape[0]} (topology is preserved -- rebuild to "
+            "change the cloud)")
+    depth = depth_of(bvh)
+
+    boxes = point_boxes(points)
+    leaf_tri, leaf_lo, leaf_hi = leaf_arrays(bvh.leaf_perm, boxes,
+                                             jnp.ones((n_built,), bool))
+    node_lo, node_hi = fit_nodes(leaf_lo, leaf_hi, depth)
+    return BVH4(node_lo=node_lo, node_hi=node_hi, leaf_tri=leaf_tri,
+                triangles=_point_soup(points), leaf_perm=bvh.leaf_perm)

@@ -43,7 +43,7 @@ import jax
 import jax.numpy as jnp
 
 from ..bvh import BVH4, bvh4_depth, fit_nodes, leaf_arrays, nondegenerate_mask
-from ..types import Triangle, aabb_of_triangles
+from ..types import Box, Triangle, aabb_of_triangles
 from . import register_builder
 
 #: candidate planes per split = BINS - 1 (the usual 8-32 sweet spot)
@@ -56,16 +56,17 @@ def _half_area(lo: jax.Array, hi: jax.Array) -> jax.Array:
     return d[..., 0] * d[..., 1] + d[..., 1] * d[..., 2] + d[..., 2] * d[..., 0]
 
 
-@register_builder("sah")
-def build_sah(tri: Triangle, depth: int | None = None,
-              bins: int = BINS) -> BVH4:
-    """Build a BVH4 with binned-SAH splits.  ``depth``/``bins`` are static."""
-    n = tri.a.shape[0]
-    if depth is None:
-        depth = bvh4_depth(n)
-    n_leaves = 4**depth
+def sah_leaf_perm(boxes: Box, depth: int, bins: int = BINS) -> jax.Array:
+    """Binned-SAH leaf-slot assignment over per-primitive AABBs.
 
-    boxes = aabb_of_triangles(tri)
+    The primitive-agnostic core of the SAH builder (steps 1-4 of the
+    module docstring): the whole split recursion consumes only boxes and
+    centroids, so triangle soups and point clouds
+    (:mod:`repro.core.build.points`) share it.  Returns the ``(4**depth,)``
+    slot permutation (-1 = empty pad slot).
+    """
+    n = boxes.lo.shape[0]
+    n_leaves = 4**depth
     centroid = 0.5 * (boxes.lo + boxes.hi)
     tri_ids = jnp.arange(n, dtype=jnp.int32)
 
@@ -123,9 +124,21 @@ def build_sah(tri: Triangle, depth: int | None = None,
         rank = pos - starts[seg]
         seg = 2 * seg + (rank >= target[seg]).astype(jnp.int32)
 
-    # seg is now a unique leaf slot per triangle (capacity clamps enforce
-    # <= 1 per slot); scatter leaves in and sweep bottom-up as LBVH does
-    leaf_perm = jnp.full((n_leaves,), -1, jnp.int32).at[seg].set(tri_ids)
+    # seg is now a unique leaf slot per primitive (capacity clamps enforce
+    # <= 1 per slot); scatter the assignment in
+    return jnp.full((n_leaves,), -1, jnp.int32).at[seg].set(tri_ids)
+
+
+@register_builder("sah")
+def build_sah(tri: Triangle, depth: int | None = None,
+              bins: int = BINS) -> BVH4:
+    """Build a BVH4 with binned-SAH splits.  ``depth``/``bins`` are static."""
+    n = tri.a.shape[0]
+    if depth is None:
+        depth = bvh4_depth(n)
+
+    boxes = aabb_of_triangles(tri)
+    leaf_perm = sah_leaf_perm(boxes, depth, bins)
     leaf_tri, leaf_lo, leaf_hi = leaf_arrays(leaf_perm, boxes,
                                              nondegenerate_mask(tri))
     node_lo, node_hi = fit_nodes(leaf_lo, leaf_hi, depth)

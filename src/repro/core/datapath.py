@@ -29,6 +29,7 @@ from .types import (
     Box,
     DatapathState,
     EuclideanResult,
+    PointBoxResult,
     QuadBoxResult,
     Ray,
     Triangle,
@@ -128,6 +129,36 @@ def ray_box_test(ray: Ray, boxes: Box) -> QuadBoxResult:
     tmin_sorted, idx_sorted, hit_sorted = quadsort(tmin, idx, hit_i)
     return QuadBoxResult(tmin=tmin_sorted, box_index=idx_sorted,
                          is_intersect=hit_sorted.astype(bool))
+
+
+def point_box_test(point: jax.Array, boxes: Box) -> PointBoxResult:
+    """Batched point-vs-4-AABB squared distance: the neighbor-query twin of
+    :func:`ray_box_test` (RTNN traverses by box *distance*, not slab entry).
+
+    point: (..., 3); boxes: (..., 4, 3) lo/hi.  Per axis the gap to the box
+    is ``max(lo - p, p - hi, 0)`` — comparator semantics, so an inverted
+    empty-pad box (lo=+inf, hi=-inf) yields +inf**2 = +inf and sorts last,
+    exactly like a missed slab in the ray path.  The same quad-sort network
+    orders the four children near-to-far for the traversal push.
+    """
+    p = point[..., None, :]  # (..., 1, 3)
+
+    # stage 2: 24 adders -- per-axis signed gaps to both faces
+    below = boxes.lo - p  # (..., 4, 3)
+    above = p - boxes.hi
+
+    # stage 4: comparator trees clamp to the outside gap (0 inside the slab)
+    zero = jnp.zeros_like(below)
+    gap = fmax(below, fmax(above, zero))
+
+    # stage 3/8: 12 multipliers + pairwise adds -> squared distance
+    sq = gap * gap
+    d2 = (sq[..., 0] + sq[..., 1]) + sq[..., 2]  # (..., 4)
+
+    # stage 10: the same quad-sorting network as OpQuadbox
+    idx = jnp.broadcast_to(jnp.arange(4, dtype=jnp.int32), d2.shape)
+    d2_sorted, idx_sorted = quadsort(d2, idx)
+    return PointBoxResult(dist_sq=d2_sorted, box_index=idx_sorted)
 
 
 # ---------------------------------------------------------------------------

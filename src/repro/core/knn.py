@@ -26,11 +26,62 @@ This module is what the MoE routers call: router logits are OpAngular jobs
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
 METRICS = ("euclidean", "angular", "cosine")
 RADIUS_METRICS = ("euclidean", "cosine")
+
+
+# ---------------------------------------------------------------------------
+# Eager query-parameter validation (shared by the free functions and the
+# session layer, so every entry point rejects bad parameters identically)
+# ---------------------------------------------------------------------------
+
+
+def check_k(k) -> int:
+    """Validate a top-k slot count eagerly.
+
+    ``k`` must be a positive int; it is *not* required to be <= the
+    candidate count — :func:`select_topk` / :func:`select_within` clamp
+    internally and pad the excess slots (a ``k > N`` used to surface as a
+    cryptic ``lax.top_k`` shape error mid-trace, and ``k <= 0`` silently
+    produced zero-width results).
+    """
+    k = int(k)
+    if k <= 0:
+        raise ValueError(f"k must be >= 1, got {k}")
+    return k
+
+
+def check_radius(radius, metric: str = "euclidean") -> float:
+    """Validate a query radius eagerly, naming the offending value.
+
+    NaN never compares true, so an unvalidated NaN radius silently
+    returned empty results from every radius query; a negative euclidean
+    radius was squared away into ``|radius|``.  Both now raise.  Cosine
+    radii are *minimum similarities*, so any non-NaN value (including
+    negatives: "at least -0.5 similar") is legal there.
+    """
+    r = float(radius)
+    if math.isnan(r):
+        raise ValueError(f"radius must not be NaN (got {radius!r})")
+    if metric == "euclidean" and r < 0.0:
+        raise ValueError(
+            f"euclidean radius must be >= 0, got {r} (distances are "
+            "non-negative, so a negative radius can match nothing)")
+    return r
+
+
+def _pad_slots(x: jax.Array, k: int, fill) -> jax.Array:
+    """Pad the trailing top-k axis from ``min(k, N)`` back out to ``k``."""
+    pad = k - x.shape[-1]
+    if pad == 0:
+        return x
+    return jnp.concatenate(
+        [x, jnp.full(x.shape[:-1] + (pad,), fill, x.dtype)], axis=-1)
 
 
 def squared_norms(x: jax.Array) -> jax.Array:
@@ -58,7 +109,11 @@ def euclidean_scores(queries: jax.Array, database: jax.Array,
 def angular_scores(queries: jax.Array, database: jax.Array,
                    precision=jax.lax.Precision.HIGHEST, *,
                    c_sq_norms: jax.Array | None = None):
-    """OpAngular outputs for all pairs: (Q.C^T, ||c||^2).  (M,D),(N,D)."""
+    """OpAngular outputs for all pairs: (Q.C^T, ||c||^2).  (M,D),(N,D).
+
+    Zero-norm vectors are unproblematic here (their dots and norms are
+    simply 0 — nothing divides); only the cosine normalization needs the
+    zero-norm convention, applied in :func:`cosine_epilogue`."""
     q = queries.astype(jnp.float32)
     c = database.astype(jnp.float32)
     dots = jnp.dot(q, c.T, precision=precision)  # (M, N)
@@ -70,17 +125,29 @@ def cosine_epilogue(dots: jax.Array, c_sq_norms: jax.Array,
                     queries: jax.Array) -> jax.Array:
     """The external-divider epilogue of Eq. (8): dot / (||q|| ||c||).
     One definition of the normalization (incl. the 1e-30 clamp) shared by
-    every backend that produces (dots, ||c||^2) pairs."""
-    q_norms = jnp.sqrt(jnp.sum(queries.astype(jnp.float32) ** 2, axis=-1))
+    every backend that produces (dots, ||c||^2) pairs.
+
+    Zero-norm convention: a pair involving a zero-norm vector (either
+    side; "zero" meaning the squared norm underflows to 0.0 in f32) has
+    no defined angle, so its similarity is pinned to ``-inf`` — such rows
+    rank strictly *last* under ``top_k`` and never satisfy a
+    minimum-similarity radius.  The raw division produced 0/eps garbage
+    (and NaN without the clamp) that ``top_k`` happily sorted first.
+    """
+    q_sq = jnp.sum(queries.astype(jnp.float32) ** 2, axis=-1)
     denom = jnp.maximum(
-        q_norms[:, None] * jnp.sqrt(c_sq_norms)[None, :], 1e-30)
-    return dots / denom
+        jnp.sqrt(q_sq)[:, None] * jnp.sqrt(c_sq_norms)[None, :], 1e-30)
+    degenerate = (q_sq == 0.0)[:, None] | (c_sq_norms == 0.0)[None, :]
+    return jnp.where(degenerate, -jnp.inf, dots / denom)
 
 
 def cosine_similarity(queries: jax.Array, database: jax.Array, *,
                       c_sq_norms: jax.Array | None = None,
                       precision=jax.lax.Precision.HIGHEST) -> jax.Array:
-    """Full cosine-similarity matrix: OpAngular outputs + external divider."""
+    """Full cosine-similarity matrix: OpAngular outputs + external divider.
+
+    Rows/columns with zero norm score ``-inf`` (rank strictly last, never
+    in any radius) rather than NaN — see :func:`cosine_epilogue`."""
     dots, c_norms = angular_scores(queries, database, precision,
                                    c_sq_norms=c_sq_norms)
     return cosine_epilogue(dots, c_norms, queries)
@@ -112,33 +179,54 @@ def pairwise_scores(queries: jax.Array, database: jax.Array,
 
 def select_topk(scores: jax.Array, k: int, metric: str = "euclidean"):
     """Top-k selection on a score matrix: ascending for euclidean distances,
-    descending for angular/cosine similarities.  Returns (scores, indices)."""
+    descending for angular/cosine similarities.  Returns (scores, indices).
+
+    ``k`` is clamped to the candidate count N: slots past N pad with the
+    metric's worst score (+inf distance / -inf similarity) and index
+    ``-1``, so over-asking never crashes inside ``lax.top_k`` — callers
+    needing a validity mask use ``indices >= 0``.  ``k <= 0`` raises."""
+    k = check_k(k)
+    kk = min(k, scores.shape[-1])
     if metric == "euclidean":
-        neg, idx = jax.lax.top_k(-scores, k)
-        return -neg, idx
-    return jax.lax.top_k(scores, k)
+        neg, idx = jax.lax.top_k(-scores, kk)
+        out, fill = -neg, jnp.inf
+    else:
+        out, idx = jax.lax.top_k(scores, kk)
+        fill = -jnp.inf
+    return _pad_slots(out, k, fill), _pad_slots(idx, k, -1)
 
 
 def select_within(scores: jax.Array, radius: float, k: int,
                   metric: str = "euclidean"):
     """Range-limited top-k: the best k candidates inside the radius.
     Returns (scores, indices, within) — ``within`` marks which of the k
-    slots actually fall inside the radius."""
+    slots actually fall inside the radius.
+
+    ``k`` clamps to the candidate count exactly as in :func:`select_topk`
+    (padded slots carry ``within=False`` and index ``-1``); ``radius`` is
+    validated per :func:`check_radius`."""
+    k = check_k(k)
+    radius = check_radius(radius, metric)
+    kk = min(k, scores.shape[-1])
     if metric == "euclidean":
         inside = scores <= radius * radius
-        neg, idx = jax.lax.top_k(jnp.where(inside, -scores, -jnp.inf), k)
-        return -neg, idx, jnp.isfinite(neg)
-    if metric == "cosine":
+        neg, idx = jax.lax.top_k(jnp.where(inside, -scores, -jnp.inf), kk)
+        out, within, fill = -neg, jnp.isfinite(neg), jnp.inf
+    elif metric == "cosine":
         inside = scores >= radius
-        top, idx = jax.lax.top_k(jnp.where(inside, scores, -jnp.inf), k)
-        return top, idx, jnp.isfinite(top)
-    raise ValueError(
-        f"unknown radius metric: {metric} (want one of {RADIUS_METRICS})")
+        out, idx = jax.lax.top_k(jnp.where(inside, scores, -jnp.inf), kk)
+        within, fill = jnp.isfinite(out), -jnp.inf
+    else:
+        raise ValueError(
+            f"unknown radius metric: {metric} (want one of {RADIUS_METRICS})")
+    return (_pad_slots(out, k, fill), _pad_slots(idx, k, -1),
+            _pad_slots(within, k, False))
 
 
 def count_within_scores(scores: jax.Array, radius: float,
                         metric: str = "euclidean") -> jax.Array:
     """Number of candidates inside the radius, per query row.  (M,N)->(M,)."""
+    radius = check_radius(radius, metric)
     if metric == "euclidean":
         inside = scores <= radius * radius
     elif metric == "cosine":

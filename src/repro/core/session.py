@@ -45,6 +45,7 @@ the engine remains swappable.
 """
 from __future__ import annotations
 
+import math
 from typing import Callable, NamedTuple
 
 import jax
@@ -53,6 +54,7 @@ import jax.numpy as jnp
 from .build import build as build_structure
 from .build import refit as refit_bvh
 from .build import tree_stats
+from .build.points import build_point_bvh, refit_points
 from .build.quality import TreeStats
 from .bvh import BVH4
 from .dispatch import (
@@ -69,6 +71,8 @@ from .knn import (
     METRICS,
     RADIUS_METRICS,
     angular_scores,
+    check_k,
+    check_radius,
     cosine_epilogue,
     cosine_similarity,
     count_within_scores,
@@ -80,6 +84,7 @@ from .knn import (
     select_within,
     squared_norms,
 )
+from .neighbor import NeighborRecord, neighbor_wavefront, point_queries
 from .traversal import trace_rays
 from .types import Triangle
 from .wavefront import RAY_TYPES, SHADOW_T_MIN, trace_wavefront
@@ -87,6 +92,8 @@ from .wavefront import RAY_TYPES, SHADOW_T_MIN, trace_wavefront
 __all__ = [
     "CacheInfo",
     "NearestResult",
+    "NeighborRecord",
+    "PointCloudScene",
     "QueryEngine",
     "Scene",
     "TraceResult",
@@ -94,7 +101,9 @@ __all__ = [
     "WithinResult",
     "default_pad_multiple",
     "distance_backends",
+    "neighbor_backends",
     "register_distance_backend",
+    "register_neighbor_backend",
     "register_trace_backend",
     "trace_backend_ray_types",
     "trace_backends",
@@ -119,10 +128,15 @@ class TraceResult(NamedTuple):
 
 class NearestResult(NamedTuple):
     """k-nearest result: scores ascending (euclidean) / descending (angular,
-    cosine), indices into the database."""
+    cosine), indices into the database.
+
+    ``valid`` masks the slots that hold a real neighbor — ``k`` is clamped
+    to the database size, so with ``k > N`` the trailing slots carry the
+    pad convention (inf / -inf score, index -1) and ``valid`` is False."""
 
     scores: jax.Array  # (M, k) f32
     indices: jax.Array  # (M, k) i32
+    valid: jax.Array  # (M, k) bool  which slots hold real neighbors
 
 
 class WithinResult(NamedTuple):
@@ -182,6 +196,13 @@ PALLAS_TRACE_LANES = 128
 # score matrix (squared distances for euclidean, similarities otherwise)
 _DISTANCE_BACKENDS: dict[str, Callable] = {}
 
+# name -> (builder(cloud, mode, k, interpret) returning fn(ctx, rays) ->
+#          NeighborRecord — ``ctx`` is a runtime argument, not closed over,
+#          so PointCloudScene.refit swaps clouds with zero retracing,
+#          lane multiple the backend wants per shard,
+#          optional prepare(cloud) -> fn(bvh) -> ctx hook, once per version)
+_NEIGHBOR_BACKENDS: dict[str, tuple] = {}
+
 
 def register_trace_backend(name: str, ray_types=RAY_TYPES,
                            lane_multiple: int | None = None,
@@ -228,12 +249,32 @@ def register_distance_backend(name: str):
     return deco
 
 
+def register_neighbor_backend(name: str, lane_multiple: int | None = None,
+                              prepare: Callable | None = None):
+    """Register a tree-backed neighbor backend under ``name``.  The builder
+    receives the static query config — ``build(cloud, mode, k, interpret)``
+    with ``mode`` in :data:`repro.core.neighbor.NEIGHBOR_MODES` — and
+    returns a jit-able ``fn(ctx, rays)`` producing a
+    :class:`~repro.core.neighbor.NeighborRecord`.  ``lane_multiple`` and
+    ``prepare`` mean exactly what they do for trace backends (the rays
+    here are :func:`~repro.core.neighbor.point_queries` bundles, so the
+    same dispatch padding applies)."""
+    def deco(build):
+        _NEIGHBOR_BACKENDS[name] = (build, lane_multiple, prepare)
+        return build
+    return deco
+
+
 def trace_backends() -> tuple[str, ...]:
     return tuple(_TRACE_BACKENDS)
 
 
 def distance_backends() -> tuple[str, ...]:
     return tuple(_DISTANCE_BACKENDS)
+
+
+def neighbor_backends() -> tuple[str, ...]:
+    return tuple(_NEIGHBOR_BACKENDS)
 
 
 @register_trace_backend("per_ray", ray_types=("closest",))
@@ -339,6 +380,54 @@ def _build_pallas_scores(index: "VectorIndex", metric: str, interpret):
     raise ValueError(f"unknown metric: {metric} (want one of {METRICS})")
 
 
+def _prepare_tree_wavefront(cloud: "PointCloudScene"):
+    """Derive the wavefront neighbor engine's ctx from the *runtime* BVH:
+    the ``||c||^2`` norms come from the same array the tree holds, so a
+    refit can never serve stale norms."""
+    return lambda bvh: (bvh, squared_norms(bvh.triangles.a))
+
+
+@register_neighbor_backend("tree_wavefront", prepare=_prepare_tree_wavefront)
+def _build_tree_wavefront(cloud: "PointCloudScene", mode: str, k: int,
+                          interpret=None):
+    """Batch-level neighbor frontier loop (``core/neighbor.py``): the
+    wavefront engine's distance twin (pure jnp, so ``interpret`` does not
+    apply)."""
+    depth = cloud.depth
+
+    def run(ctx, rays):
+        bvh, sq = ctx
+        return neighbor_wavefront(bvh, sq, rays, depth, k=k, mode=mode)
+
+    return run
+
+
+def _prepare_tree_pallas(cloud: "PointCloudScene"):
+    from ..kernels.traverse import pack_point_bvh  # deferred (circular init)
+    return pack_point_bvh
+
+
+@register_neighbor_backend("tree_pallas", lane_multiple=PALLAS_TRACE_LANES,
+                           prepare=_prepare_tree_pallas)
+def _build_tree_pallas(cloud: "PointCloudScene", mode: str, k: int,
+                       interpret=None):
+    """Fused Pallas neighbor traversal (``kernels/traverse.py``): the whole
+    pop → point-box → point-distance → insert → push round loop runs
+    inside one kernel with the per-lane top-k registers and traversal
+    stack on-chip — results bit-match the wavefront neighbor engine."""
+    # deferred import: repro.kernels imports repro.core submodules, so a
+    # top-level import here would be circular during package init
+    from ..kernels.traverse import neighbor_packed
+
+    depth = cloud.depth
+
+    def run(ctx, rays):
+        return neighbor_packed(ctx, rays, depth, k, mode=mode,
+                               interpret=interpret)
+
+    return run
+
+
 # ---------------------------------------------------------------------------
 # Scene / VectorIndex: built once, queried everywhere
 # ---------------------------------------------------------------------------
@@ -371,6 +460,19 @@ def _validate_finite(tri: Triangle, where: str) -> None:
 # refit is jittable with static shapes, so one jit here means every
 # animation frame after the first re-enters one compiled sweep
 _refit_jit = jax.jit(refit_bvh)
+_refit_points_jit = jax.jit(refit_points)
+
+
+def _validate_points_finite(points: jax.Array, where: str) -> None:
+    """Reject non-finite points eagerly (same rationale as triangle
+    scenes: one NaN poisons the root box and every Morton/SAH decision).
+    Skipped under tracing so cloud builds stay jittable."""
+    if isinstance(points, jax.core.Tracer):
+        return
+    if not bool(jnp.all(jnp.isfinite(points))):
+        raise ValueError(
+            f"{where}: points must be finite (no NaN/inf) — a single bad "
+            "point poisons the cloud bounds and every tree build")
 
 
 class Scene:
@@ -503,6 +605,88 @@ class VectorIndex:
         return f"VectorIndex(size={self.size}, dim={self.dim})"
 
 
+class PointCloudScene:
+    """A prepared point cloud: a BVH4 over AABB-per-point leaves *plus* the
+    equivalent :class:`VectorIndex` over the same points.
+
+    The RTNN unification surface (DESIGN.md §9): one object serves both
+    the traversal-backed neighbor engines (``tree_wavefront`` /
+    ``tree_pallas``, which walk the tree with query radii as ray extents)
+    and the brute-force distance backends (``mxu`` / ``pallas``, the
+    bit-level oracle) — ``QueryEngine`` routes between them per query
+    (``backend="auto"``) without the caller re-staging data.
+
+    Construction is pluggable exactly like :class:`Scene`
+    (``builder="lbvh" | "sah"``, sharing the triangle builders' slot-
+    assignment cores), and clouds are updatable in place (:meth:`refit` —
+    same zero-retrace contract, via the cull-free
+    :func:`~repro.core.build.points.refit_points`).
+    """
+
+    def __init__(self, bvh: BVH4, depth: int, device=None,
+                 builder: str = "lbvh"):
+        if device is not None:
+            bvh = jax.device_put(bvh, device)
+        self.bvh = bvh
+        self.depth = int(depth)
+        self.builder = builder
+        #: bumped by :meth:`refit`; engines key replicated copies, packed
+        #: kernel operands and brute-path closures on it
+        self.version = 0
+        #: the same points as a brute-force index (shared ||c||^2 norms)
+        self.index = VectorIndex(bvh.triangles.a)
+        self._root_vol: float | None = None
+
+    @classmethod
+    def from_points(cls, points, depth: int | None = None, device=None,
+                    builder: str = "lbvh") -> "PointCloudScene":
+        """Build from an ``(N, 3)`` point array with the named builder
+        core (the tree path is 3-D; higher-dimensional data belongs in a
+        plain :class:`VectorIndex`)."""
+        points = jnp.asarray(points, jnp.float32)
+        _validate_points_finite(points, "PointCloudScene.from_points")
+        res = build_point_bvh(points, builder, depth)
+        return cls(res.bvh, res.depth, device, builder=res.builder)
+
+    def refit(self, points) -> "PointCloudScene":
+        """Update the cloud's points in place, keeping its topology (same
+        count, same order).  Zero retraces, like :meth:`Scene.refit`:
+        every neighbor backend threads the BVH as a runtime argument, and
+        the brute path re-derives its norms through the version bump.
+        Returns ``self`` for chaining."""
+        points = jnp.asarray(points, jnp.float32)
+        _validate_points_finite(points, "PointCloudScene.refit")
+        self.bvh = _refit_points_jit(self.bvh, points)
+        self.index = VectorIndex(self.bvh.triangles.a)
+        self.version += 1
+        self._root_vol = None
+        return self
+
+    @property
+    def points(self) -> jax.Array:
+        return self.bvh.triangles.a
+
+    @property
+    def size(self) -> int:
+        return int(self.bvh.triangles.a.shape[0])
+
+    def root_volume(self) -> float:
+        """Volume of the root AABB (cached per version) — the denominator
+        of the "auto" policy's radius-selectivity estimate."""
+        if self._root_vol is None:
+            ext = jnp.maximum(self.bvh.node_hi[0] - self.bvh.node_lo[0],
+                              0.0)
+            self._root_vol = float(ext[0] * ext[1] * ext[2])
+        return self._root_vol
+
+    def engine(self, **kwargs) -> "QueryEngine":
+        return QueryEngine(cloud=self, **kwargs)
+
+    def __repr__(self):
+        return (f"PointCloudScene(size={self.size}, depth={self.depth}, "
+                f"builder={self.builder!r})")
+
+
 # ---------------------------------------------------------------------------
 # QueryEngine: the single typed entry point
 # ---------------------------------------------------------------------------
@@ -552,13 +736,26 @@ class QueryEngine:
     #: past this budget the wavefront engine handles the scene unchanged
     AUTO_PALLAS_SCENE_BYTES = 8 * 2**20
 
+    #: below this cloud size "auto" keeps neighbor queries on the brute
+    #: path: one small MXU matmul beats any traversal's pointer chasing
+    AUTO_TREE_MIN_POINTS = 4096
+
+    #: "auto" routes a neighbor query to the tree only while its expected
+    #: selectivity (fraction of the cloud each query touches: k/N for
+    #: nearest, ball volume / root volume for radius queries) stays under
+    #: this — a query that touches most of the cloud visits most of the
+    #: tree, and the brute matmul wins
+    AUTO_TREE_MAX_SELECTIVITY = 0.05
+
     def __init__(self, scene: Scene | None = None,
-                 index: VectorIndex | None = None, *,
+                 index: VectorIndex | None = None,
+                 cloud: "PointCloudScene | None" = None, *,
                  backend: str = "auto", pad_multiple: int | None = None,
                  shard: str | int = "auto", chunk_size: int | None = None,
                  interpret: bool | None = None):
         self.scene = scene
-        self.index = index
+        self._index = index
+        self.cloud = cloud
         self.default_backend = backend
         self.default_shard = shard
         self.default_chunk_size = chunk_size
@@ -569,6 +766,22 @@ class QueryEngine:
         self._placed: dict = {}  # (kind, shards) -> replicated Scene/index
         self._hits = 0
         self._misses = 0
+
+    @property
+    def index(self) -> VectorIndex | None:
+        """The engine's vector index: the explicit one, else the cloud's
+        (a :class:`PointCloudScene` carries its brute-oracle twin, so
+        distance queries on a cloud engine need no separate index)."""
+        if self._index is None and self.cloud is not None:
+            return self.cloud.index
+        return self._index
+
+    def _index_version(self) -> int:
+        """Version of the backing index data: a cloud refit swaps the
+        brute path's database, so closures over it must re-key."""
+        if self._index is None and self.cloud is not None:
+            return self.cloud.version
+        return 0
 
     # -- cache ------------------------------------------------------------
 
@@ -631,6 +844,55 @@ class QueryEngine:
         only add overhead)."""
         return "pallas" if jax.default_backend() == "tpu" else "mxu"
 
+    def resolve_neighbor_backend(self, kind: str, metric: str,
+                                 k: int | None = None,
+                                 radius: float | None = None) -> str:
+        """The backend "auto" picks for ``nearest`` / ``within`` /
+        ``count_within``: tree-vs-brute by N, dimension and selectivity.
+
+        The tree path needs a :class:`PointCloudScene` (which pins the
+        dimension to 3 — higher-dimensional indexes have no cloud and stay
+        brute) and a euclidean metric; below
+        :data:`AUTO_TREE_MIN_POINTS` points, or when the query's expected
+        selectivity (k/N for nearest; search-ball volume over root-box
+        volume for radius queries) exceeds
+        :data:`AUTO_TREE_MAX_SELECTIVITY`, the brute matmul wins and
+        "auto" stays on the distance backends.  Otherwise: the fused
+        Pallas neighbor kernel on TPU while the packed cloud fits its
+        on-chip budget, the wavefront neighbor engine everywhere else.
+        Either way every route returns the same in-radius sets and
+        neighbor ranks, so the policy is pure scheduling."""
+        if self.cloud is None or metric != "euclidean":
+            return self.resolve_distance_backend()
+        n = self.cloud.size
+        if n < self.AUTO_TREE_MIN_POINTS:
+            return self.resolve_distance_backend()
+        if kind == "nearest":
+            selectivity = (1 if k is None else int(k)) / n
+        else:
+            r = float(radius)
+            ball = 4.0 / 3.0 * math.pi * r**3
+            vol = self.cloud.root_volume()
+            selectivity = ball / vol if (vol > 0.0
+                                         and math.isfinite(ball)) else 1.0
+        if selectivity > self.AUTO_TREE_MAX_SELECTIVITY:
+            return self.resolve_distance_backend()
+        if (jax.default_backend() == "tpu"
+                and self._cloud_resident_bytes()
+                <= self.AUTO_PALLAS_SCENE_BYTES):
+            return "tree_pallas"
+        return "tree_wavefront"
+
+    def _cloud_resident_bytes(self) -> int:
+        """Bytes the fused neighbor kernel keeps resident per tile: node
+        boxes + leaf table + packed point rows (x, y, z, ||c||^2)."""
+        if self.cloud is None:
+            return 0
+        bvh = self.cloud.bvh
+        n_nodes = bvh.node_lo.shape[0]
+        return 4 * (2 * n_nodes * 3 + bvh.leaf_tri.shape[0]
+                    + 4 * bvh.triangles.a.shape[0])
+
     # -- execution planning (sharding + chunking, core/dispatch.py) -------
 
     def _resolve_shards(self, shard, n: int) -> int:
@@ -687,17 +949,48 @@ class QueryEngine:
 
     def _placed_index(self, plan: ExecPlan) -> "VectorIndex":
         """The index with database + precomputed norms replicated across
-        the plan's mesh."""
+        the plan's mesh (keyed on the index version: a cloud refit swaps
+        the database, so stale replicas are evicted)."""
         if plan.shards == 1:
             return self.index
-        key = ("index", plan.shards)
+        key = ("index", plan.shards, self._index_version())
         placed = self._placed.get(key)
         if placed is None:
+            self._placed = {k: v for k, v in self._placed.items()
+                            if k[0] != "index" or k[1] != plan.shards}
+            index = self.index
             placed = VectorIndex(
-                replicated(plan.mesh, self.index.database),
-                sq_norms=replicated(plan.mesh, self.index.sq_norms))
+                replicated(plan.mesh, index.database),
+                sq_norms=replicated(plan.mesh, index.sq_norms))
             self._placed[key] = placed
         return placed
+
+    def _neighbor_ctx(self, name: str, prepare, plan: ExecPlan):
+        """The neighbor backend's context operand, mirroring
+        :meth:`_trace_ctx`: prepared once per cloud version and mesh
+        (packed kernel operands / derived norms), re-fed to every chunk
+        and shard.  A refit bumps the version, so moved clouds re-prepare
+        (one compiled re-execution, zero retraces) without recompiling."""
+        if prepare is None:
+            bvh = self.cloud.bvh
+            if plan.shards == 1:
+                return bvh
+        key = ("neighbor_ctx", name, plan.shards, self.cloud.version)
+        ctx = self._placed.get(key)
+        if ctx is None:
+            self._placed = {k: v for k, v in self._placed.items()
+                            if k[0] != "neighbor_ctx" or k[1] != name
+                            or k[2] != plan.shards}
+            if prepare is None:
+                ctx = self.cloud.bvh
+            else:
+                fn = self._compiled(("prepare", name),
+                                    lambda: prepare(self.cloud))
+                ctx = fn(self.cloud.bvh)
+            if plan.shards > 1:
+                ctx = replicated(plan.mesh, ctx)
+            self._placed[key] = ctx
+        return ctx
 
     # -- traversal queries -------------------------------------------------
 
@@ -801,7 +1094,8 @@ class QueryEngine:
         if n == 0:  # empty guard: typed empty result, nothing compiled
             return empty()
         plan = self._plan(n, shards, chunk_size)
-        key = (kind, name, metric) + statics + plan.key + _elem_key(q)
+        key = ((kind, name, metric, self._index_version()) + statics
+               + plan.key + _elem_key(q))
         build_scores = _DISTANCE_BACKENDS[name]
 
         def build():
@@ -816,18 +1110,141 @@ class QueryEngine:
         return concat_rows([fn(block) for block in split_blocks(q, plan)],
                            n)
 
+    def _tree_neighbor(self, kind: str, queries, k: int, radius,
+                       name: str, shard=None,
+                       chunk_size: int | None = None) -> NeighborRecord:
+        """Run a neighbor query through a registered tree backend: pad /
+        shard / chunk the query batch exactly like a trace (queries ride
+        as :func:`point_queries` ray bundles; the radius is a *runtime*
+        extent, so sweeping radii re-enters one compiled function)."""
+        if self.cloud is None:
+            raise ValueError(
+                f"backend {name!r} needs a PointCloudScene; construct "
+                "with QueryEngine(cloud=...) or PointCloudScene.engine()")
+        mode = "nearest" if kind == "nearest" else "within"
+        build, lane_multiple, prepare = _NEIGHBOR_BACKENDS[name]
+        q = jnp.asarray(queries, jnp.float32)
+        if q.ndim != 2 or q.shape[-1] != 3:
+            raise ValueError(
+                f"tree-backed {kind} expects (M, 3) queries, got "
+                f"{tuple(q.shape)}")
+        # clamp the top-k register count to the cloud (k > N pads below)
+        kk = max(1, min(int(k), self.cloud.size))
+        n = q.shape[0]
+        shards = self._resolve_shards(shard, n)
+        if n == 0:  # empty guard: typed empty result, nothing compiled
+            z = jnp.zeros((0,), jnp.int32)
+            return NeighborRecord(
+                dist_sq=jnp.zeros((0, k), jnp.float32),
+                index=jnp.zeros((0, k), jnp.int32),
+                valid=jnp.zeros((0, k), bool), count=z, box_jobs=z,
+                point_jobs=z, rounds=jnp.int32(0))
+        rays = point_queries(q, radius)
+        plan = self._plan(n, shards, chunk_size,
+                          lane_multiple=lane_multiple)
+        key = ("neighbor", name, mode, kk) + plan.key + _elem_key(rays)
+
+        def build_fn():
+            run = build(self.cloud, mode, kk, self.interpret)
+            if plan.shards == 1:
+                return run
+
+            def per_shard(ctx, r):
+                rec = run(ctx, r)
+                return rec._replace(rounds=jnp.atleast_1d(rec.rounds))
+
+            return shard_rows_ctx(per_shard, plan.mesh)
+
+        fn = self._compiled(key, build_fn)
+        ctx = self._neighbor_ctx(name, prepare, plan)
+        outs = [fn(ctx, block) for block in split_blocks(rays, plan)]
+        rounds = jnp.max(jnp.stack(
+            [jnp.max(jnp.atleast_1d(o.rounds)) for o in outs]))
+        rec = concat_rows([o._replace(rounds=None) for o in outs], n)
+        rec = rec._replace(rounds=rounds)
+        if kk < k:  # pad the clamped top-k axis back out (k > N)
+            pad = k - kk
+            rec = rec._replace(
+                dist_sq=jnp.concatenate(
+                    [rec.dist_sq,
+                     jnp.full((n, pad), jnp.inf, jnp.float32)], axis=1),
+                index=jnp.concatenate(
+                    [rec.index, jnp.full((n, pad), -1, jnp.int32)],
+                    axis=1),
+                valid=jnp.concatenate(
+                    [rec.valid, jnp.zeros((n, pad), bool)], axis=1))
+        return rec
+
+    def _resolve_neighbor_name(self, kind: str, metric: str, backend,
+                               k=None, radius=None) -> str:
+        name = backend or self.default_backend
+        if name == "auto":
+            name = self.resolve_neighbor_backend(kind, metric, k=k,
+                                                 radius=radius)
+        if name in _NEIGHBOR_BACKENDS and metric != "euclidean":
+            raise ValueError(
+                f"tree backend {name!r} supports metric='euclidean' "
+                f"only, got {metric!r} (use the mxu/pallas brute "
+                "backends for angular/cosine)")
+        return name
+
+    def neighbor_search(self, queries, k: int, radius=None, *,
+                        mode: str = "within",
+                        backend: str | None = None, shard=None,
+                        chunk_size: int | None = None) -> NeighborRecord:
+        """Direct tree-backed neighbor query returning the full
+        :class:`~repro.core.neighbor.NeighborRecord` (distances, indices,
+        exact in-radius counts *and* per-query job statistics — what the
+        benchmarks plot).  ``nearest`` / ``within`` / ``count_within``
+        are the typed convenience views over this."""
+        k = check_k(k)
+        if radius is not None:
+            radius = check_radius(radius, "euclidean")
+        name = backend or self.default_backend
+        if name == "auto":
+            name = ("tree_pallas"
+                    if (jax.default_backend() == "tpu"
+                        and self._cloud_resident_bytes()
+                        <= self.AUTO_PALLAS_SCENE_BYTES)
+                    else "tree_wavefront")
+        if name not in _NEIGHBOR_BACKENDS:
+            raise ValueError(f"unknown neighbor backend {name!r} "
+                             f"(registered: {neighbor_backends()})")
+        kind = "nearest" if mode == "nearest" else "within"
+        return self._tree_neighbor(kind, queries, k, radius, name,
+                                   shard=shard, chunk_size=chunk_size)
+
     def nearest(self, queries, k: int, metric: str = "euclidean", *,
                 backend: str | None = None, shard=None,
                 chunk_size: int | None = None) -> NearestResult:
-        """Exact k-nearest neighbours against the index."""
+        """Exact k-nearest neighbours.  ``k`` is validated eagerly
+        (``ValueError`` on ``k <= 0``) and clamped to the database size —
+        ``k > N`` pads the trailing slots (inf/-inf score, index -1,
+        ``valid`` False) instead of crashing inside ``lax.top_k``.
+
+        With a :class:`PointCloudScene`, ``backend="auto"`` routes
+        euclidean queries through the BVH (``tree_wavefront`` /
+        ``tree_pallas``) when the tree wins; the brute backends
+        (``mxu`` / ``pallas``) remain the rank-equivalent oracle."""
         if metric not in METRICS:
             raise ValueError(f"unknown metric: {metric}")
-        k = int(k)
+        k = check_k(k)
+        name = self._resolve_neighbor_name("nearest", metric, backend,
+                                           k=k)
+        if name in _NEIGHBOR_BACKENDS:
+            rec = self._tree_neighbor("nearest", queries, k, None, name,
+                                      shard=shard, chunk_size=chunk_size)
+            return NearestResult(rec.dist_sq, rec.index, rec.valid)
+
+        def topk(s):
+            scores, idx = select_topk(s, k, metric)
+            return NearestResult(scores, idx, idx >= 0)
+
         return self._distance_fn(
-            "nearest", queries, metric, backend, (k,),
-            lambda s: NearestResult(*select_topk(s, k, metric)),
+            "nearest", queries, metric, name, (k,), topk,
             lambda: NearestResult(jnp.zeros((0, k), jnp.float32),
-                                  jnp.zeros((0, k), jnp.int32)),
+                                  jnp.zeros((0, k), jnp.int32),
+                                  jnp.zeros((0, k), bool)),
             shard=shard, chunk_size=chunk_size)
 
     def within(self, queries, radius: float, k: int,
@@ -835,12 +1252,24 @@ class QueryEngine:
                backend: str | None = None, shard=None,
                chunk_size: int | None = None) -> WithinResult:
         """Fixed-radius query: best ``k`` in-range neighbours (the
-        extent-limited shadow-ray twin, DESIGN.md §3)."""
+        extent-limited shadow-ray twin, DESIGN.md §3).  ``radius`` and
+        ``k`` are validated eagerly (``ValueError`` on NaN / negative
+        euclidean radius and on ``k <= 0``); ``k > N`` pads like
+        :meth:`nearest`.  Routing is as in :meth:`nearest`: tree-backed
+        for euclidean cloud queries when the tree wins, in-radius
+        membership bit-exact against the brute oracle either way."""
         if metric not in RADIUS_METRICS:
             raise ValueError(f"unknown radius metric: {metric}")
-        radius, k = float(radius), int(k)
+        radius = check_radius(radius, metric)
+        k = check_k(k)
+        name = self._resolve_neighbor_name("within", metric, backend,
+                                           k=k, radius=radius)
+        if name in _NEIGHBOR_BACKENDS:
+            rec = self._tree_neighbor("within", queries, k, radius, name,
+                                      shard=shard, chunk_size=chunk_size)
+            return WithinResult(rec.dist_sq, rec.index, rec.valid)
         return self._distance_fn(
-            "within", queries, metric, backend, (radius, k),
+            "within", queries, metric, name, (radius, k),
             lambda s: WithinResult(*select_within(s, radius, k, metric)),
             lambda: WithinResult(jnp.zeros((0, k), jnp.float32),
                                  jnp.zeros((0, k), jnp.int32),
@@ -851,12 +1280,22 @@ class QueryEngine:
                      metric: str = "euclidean", *,
                      backend: str | None = None, shard=None,
                      chunk_size: int | None = None) -> jax.Array:
-        """How many database points fall within ``radius`` per query."""
+        """How many database points fall within ``radius`` per query.
+        ``radius`` is validated eagerly (``ValueError`` on NaN / negative
+        euclidean radius); routing is as in :meth:`within`, and the
+        tree-backed count is exact (the traversal counts every in-radius
+        leaf acceptance, not just the best ``k``)."""
         if metric not in RADIUS_METRICS:
             raise ValueError(f"unknown radius metric: {metric}")
-        radius = float(radius)
+        radius = check_radius(radius, metric)
+        name = self._resolve_neighbor_name("count_within", metric,
+                                           backend, radius=radius)
+        if name in _NEIGHBOR_BACKENDS:
+            return self._tree_neighbor(
+                "count_within", queries, 1, radius, name,
+                shard=shard, chunk_size=chunk_size).count
         return self._distance_fn(
-            "count_within", queries, metric, backend, (radius,),
+            "count_within", queries, metric, name, (radius,),
             lambda s: count_within_scores(s, radius, metric),
             lambda: jnp.zeros((0,), jnp.int32),
             shard=shard, chunk_size=chunk_size)
@@ -881,6 +1320,7 @@ class QueryEngine:
 
     def __repr__(self):
         return (f"QueryEngine(scene={self.scene!r}, index={self.index!r}, "
+                f"cloud={self.cloud!r}, "
                 f"backend={self.default_backend!r}, "
                 f"pad_multiple={self.pad_multiple}, "
                 f"shard={self.default_shard!r}, "

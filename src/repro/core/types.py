@@ -129,6 +129,21 @@ class QuadBoxResult(NamedTuple):
     is_intersect: jax.Array  # (..., 4) bool
 
 
+class PointBoxResult(NamedTuple):
+    """Output bundle of a point/quad-box distance job (the RTNN analogue of
+    :class:`QuadBoxResult`: neighbor queries traverse by *box distance*
+    instead of slab-test entry distance).
+
+    ``dist_sq`` is the squared Euclidean distance from the query point to
+    each box (0 inside), sorted ascending; ``box_index[i]`` links sorted
+    slot i back to the input box.  Inverted (empty-pad) boxes report +inf
+    and therefore sort last / never pass a radius bound.
+    """
+
+    dist_sq: jax.Array  # (..., 4) f32 sorted ascending
+    box_index: jax.Array  # (..., 4) i32
+
+
 class TriangleResult(NamedTuple):
     """Output bundle of an OpTriangle job: t = t_num / t_denom is external."""
 

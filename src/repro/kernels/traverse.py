@@ -54,7 +54,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from ..core.bvh import BVH4, level_offset
-from ..core.datapath import ray_box_test, ray_triangle_test
+from ..core.datapath import point_box_test, ray_box_test, ray_triangle_test
+from ..core.knn import squared_norms
+from ..core.neighbor import (
+    NEIGHBOR_MODES,
+    NeighborRecord,
+    insert_sorted,
+    leaf_dist_sq,
+    prune_bound,
+)
 from ..core.traversal import STACK_SIZE
 from ..core.types import Box, Ray, Triangle
 from ..core.wavefront import RAY_TYPES, SHADOW_T_MIN, WavefrontRecord, _tile_ray
@@ -293,6 +301,226 @@ def traverse_packed(packed, rays: Ray, depth: int, *,
                            quadbox_jobs=out_qb[0, :n],
                            triangle_jobs=out_ntri[0, :n],
                            rounds=jnp.max(out_rounds))
+
+
+# ---------------------------------------------------------------------------
+# Fused neighbor traversal: kNN/radius queries with the loop on-chip
+# ---------------------------------------------------------------------------
+#
+# The distance twin of `_traverse_kernel` (RTNN on the fused engine): same
+# tile shape, same lane-private stack residency, same whole-tree runtime
+# operands — but rounds order children by point-box *distance* and leaf
+# visits feed a running top-k insertion network instead of a best-hit
+# register.  The round body calls the same stage helpers as
+# `core/neighbor.neighbor_wavefront` (point_box_test, leaf_dist_sq,
+# insert_sorted, prune_bound), so both engines' leaf acceptance is the
+# brute oracle's exact float comparison.
+
+
+def pack_point_bvh(bvh: BVH4):
+    """Point BVH4 -> the neighbor kernel's resident operands.
+
+    Node boxes and the leaf table pack exactly like :func:`pack_bvh`; the
+    cloud packs as 4 rows (x, y, z, ||c||^2) so each candidate gather
+    also lands the precomputed squared norm the oracle form needs.
+    Deriving the norms here — from the same array the tree holds — is
+    what keeps refit safe: re-packing a refit BVH can't serve stale
+    norms.
+    """
+    n_nodes = bvh.node_lo.shape[0]
+    nodes_pad = ceil_to(n_nodes, LANES)
+    nlo = pad_cols(bvh.node_lo.T, nodes_pad, jnp.inf)
+    nhi = pad_cols(bvh.node_hi.T, nodes_pad, -jnp.inf)
+    leaf_pad = ceil_to(bvh.leaf_tri.shape[0], LANES)
+    leaf = pad_cols(bvh.leaf_tri[None, :].astype(jnp.int32), leaf_pad, -1)
+    pts = bvh.triangles.a  # the cloud (see core/build/points.py)
+    pts_pad = ceil_to(pts.shape[0], LANES)
+    pt_rows = pad_cols(
+        jnp.concatenate([pts.T, squared_norms(pts)[None, :]], axis=0),
+        pts_pad)
+    return nlo, nhi, leaf, pt_rows
+
+
+def _neighbor_kernel(ray_ref, nlo_ref, nhi_ref, leaf_ref, pts_ref,
+                     d_ref, i_ref, cnt_ref, bj_ref, pj_ref, rounds_ref, *,
+                     depth: int, k: int, mode: str, max_rounds: int,
+                     n_leaf: int):
+    """One tile = 128 queries searched to completion inside the kernel."""
+    ray = _unpack_ray(ray_ref[...])
+    node_lo = nlo_ref[...]  # (3, num_nodes_pad)
+    node_hi = nhi_ref[...]
+    leaf_tab = leaf_ref[0, :]  # (n_leaf_pad,) i32
+    pt_rows = pts_ref[...]  # (4, n_pts_pad): rows x | y | z | ||c||^2
+
+    p = ray.origin  # (L, 3): the query points
+    r_sq = ray.extent * ray.extent  # inf extent -> inf bound
+    q_sq = jnp.sum(p * p, axis=-1)
+
+    leaf_parent_offset = level_offset(depth - 1)
+    leaf_offset = level_offset(depth)
+    lanes = jnp.arange(LANES, dtype=jnp.int32)
+    quad = jnp.arange(4, dtype=jnp.int32)
+
+    stack0 = jnp.zeros((STACK_SIZE, LANES), jnp.int32)  # root pre-pushed
+    state0 = (stack0, jnp.ones((LANES,), jnp.int32),
+              jnp.full((k, LANES), jnp.inf, jnp.float32),
+              jnp.full((k, LANES), -1, jnp.int32),
+              jnp.zeros((LANES,), jnp.int32),
+              jnp.zeros((LANES,), jnp.int32), jnp.zeros((LANES,), jnp.int32),
+              jnp.int32(0))
+
+    def cond(state):
+        _, sp, _, _, _, _, _, rounds = state
+        return jnp.any(sp > 0) & (rounds < max_rounds)
+
+    def body(state):
+        stack, sp, best_d, best_i, count, n_box, n_pt, rounds = state
+        active = sp > 0
+
+        # frontier pop (masked: retired lanes contribute no jobs)
+        top = jnp.take_along_axis(stack, jnp.maximum(sp - 1, 0)[None, :],
+                                  axis=0)[0]
+        node = jnp.where(active, top, 0)
+        sp = jnp.where(active, sp - 1, sp)
+        is_leaf_parent = node >= leaf_parent_offset
+        base = 4 * node + 1
+
+        # ---- point-box job: the popped node's 4 child AABBs, per lane ----
+        cidx = base[:, None] + quad[None, :]  # (L, 4)
+        lo = jnp.moveaxis(jnp.take(node_lo, cidx, axis=1), 0, -1)  # (L,4,3)
+        hi = jnp.moveaxis(jnp.take(node_hi, cidx, axis=1), 0, -1)
+        pb = point_box_test(p, Box(lo=lo, hi=hi))  # shared stage helper
+
+        # ---- point-distance round for leaf-parent lanes ------------------
+        leaf_pos = base[:, None] - leaf_offset + quad[None, :]
+        leaf_pos = jnp.clip(leaf_pos, 0, n_leaf - 1)
+        cand = jnp.take(leaf_tab, leaf_pos)  # (L, 4), -1 = padded leaf
+        pv = jnp.take(pt_rows, jnp.maximum(cand, 0), axis=1)  # (4, L, 4)
+        pts = jnp.moveaxis(pv[0:3], 0, -1)  # (L, 4, 3)
+        d_sq = leaf_dist_sq(p, pts, pv[3])  # oracle MXU form, (L, 4)
+        in_r = (active[:, None] & is_leaf_parent[:, None]
+                & (cand >= 0) & (d_sq <= r_sq[:, None]))
+        count = count + jnp.sum(in_r, axis=1)
+        for c in range(4):  # static: 4 insertion beats per round
+            best_d, best_i = insert_sorted(
+                best_d, best_i, d_sq[:, c], cand[:, c], in_r[:, c])
+
+        # ---- push surviving children far-to-near -------------------------
+        bound = prune_bound(r_sq, best_d[k - 1], q_sq, mode)
+        for c in range(4):
+            slot = 3 - c  # farthest first, nearest ends on top
+            ok = (active & ~is_leaf_parent
+                  & (pb.dist_sq[:, slot] <= bound))
+            child = base + pb.box_index[:, slot]
+            pos = jnp.minimum(sp, STACK_SIZE - 1)
+            cur = jnp.take_along_axis(stack, pos[None, :], axis=0)[0]
+            stack = stack.at[pos, lanes].set(jnp.where(ok, child, cur))
+            sp = jnp.where(ok, sp + 1, sp)
+
+        n_box = n_box + active.astype(jnp.int32)
+        n_pt = n_pt + jnp.where(active & is_leaf_parent, 4, 0)
+        return stack, sp, best_d, best_i, count, n_box, n_pt, rounds + 1
+
+    (_, _, best_d, best_i, count, n_box, n_pt, rounds) = jax.lax.while_loop(
+        cond, body, state0)
+
+    d_ref[...] = best_d
+    i_ref[...] = best_i
+    cnt_ref[0, :] = count
+    bj_ref[0, :] = n_box
+    pj_ref[0, :] = n_pt
+    rounds_ref[0, :] = jnp.full((LANES,), rounds, jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("depth", "k", "mode",
+                                             "max_rounds", "interpret"))
+def neighbor_packed(packed, queries: Ray, depth: int, k: int, *,
+                    mode: str = "within", max_rounds: int | None = None,
+                    interpret: bool | None = None) -> NeighborRecord:
+    """:func:`neighbor_fused` on pre-packed point-BVH operands.
+
+    ``packed`` is :func:`pack_point_bvh`'s output — prepared once per
+    cloud version by the session engine and re-fed per chunk/shard,
+    mirroring :func:`traverse_packed`.
+    """
+    if mode not in NEIGHBOR_MODES:
+        raise ValueError(
+            f"mode must be one of {NEIGHBOR_MODES}, got {mode!r}")
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    if max_rounds is None:
+        max_rounds = level_offset(depth)  # exact bound: one pop per node
+    interpret = resolve_interpret(interpret)
+
+    n = queries.origin.shape[0]
+    if n == 0:
+        z = jnp.zeros((0,), jnp.int32)
+        return NeighborRecord(
+            dist_sq=jnp.zeros((0, k), jnp.float32),
+            index=jnp.zeros((0, k), jnp.int32),
+            valid=jnp.zeros((0, k), bool), count=z, box_jobs=z,
+            point_jobs=z, rounds=jnp.int32(0))
+    n_pad = ceil_to(n, LANES)
+    ray_op = pack_rays(queries, n_pad)
+    nlo, nhi, leaf, pt_rows = packed
+    n_leaf = 4 ** depth  # true (pre-padding) leaf count
+
+    kernel = functools.partial(
+        _neighbor_kernel, depth=depth, k=int(k), mode=mode,
+        max_rounds=int(max_rounds), n_leaf=n_leaf)
+    whole = lambda shape: pl.BlockSpec(shape, lambda t: (0, 0))  # noqa: E731
+    out_d, out_i, out_cnt, out_bj, out_pj, out_rounds = pl.pallas_call(
+        kernel,
+        grid=(n_pad // LANES,),
+        in_specs=[
+            pl.BlockSpec((N_RAY_ROWS, LANES), lambda t: (0, t)),
+            whole(nlo.shape),
+            whole(nhi.shape),
+            whole(leaf.shape),
+            whole(pt_rows.shape),
+        ],
+        out_specs=(
+            pl.BlockSpec((k, LANES), lambda t: (0, t)),
+            pl.BlockSpec((k, LANES), lambda t: (0, t)),
+            pl.BlockSpec((1, LANES), lambda t: (0, t)),
+            pl.BlockSpec((1, LANES), lambda t: (0, t)),
+            pl.BlockSpec((1, LANES), lambda t: (0, t)),
+            pl.BlockSpec((1, LANES), lambda t: (0, t)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((k, n_pad), jnp.float32),
+            jax.ShapeDtypeStruct((k, n_pad), jnp.int32),
+            jax.ShapeDtypeStruct((1, n_pad), jnp.int32),
+            jax.ShapeDtypeStruct((1, n_pad), jnp.int32),
+            jax.ShapeDtypeStruct((1, n_pad), jnp.int32),
+            jax.ShapeDtypeStruct((1, n_pad), jnp.int32),
+        ),
+        interpret=interpret,
+    )(ray_op, nlo, nhi, leaf, pt_rows)
+
+    best_i = out_i[:, :n].T
+    return NeighborRecord(dist_sq=out_d[:, :n].T, index=best_i,
+                          valid=best_i >= 0, count=out_cnt[0, :n],
+                          box_jobs=out_bj[0, :n], point_jobs=out_pj[0, :n],
+                          rounds=jnp.max(out_rounds))
+
+
+def neighbor_fused(bvh: BVH4, queries: Ray, depth: int, k: int, *,
+                   mode: str = "within", max_rounds: int | None = None,
+                   interpret: bool | None = None) -> NeighborRecord:
+    """Neighbor-search a query batch with the whole round loop on-chip.
+
+    Same contract as :func:`repro.core.neighbor.neighbor_wavefront`
+    (whose record type it returns): ``queries`` are
+    :func:`~repro.core.neighbor.point_queries` rays carrying the radius
+    as extent; ``k`` / ``mode`` / ``max_rounds`` are static.  The packed
+    BVH is a runtime argument, so ``PointCloudScene.refit`` re-enters the
+    compiled kernel with zero retracing.  Convenience entry point packing
+    per call; repeated queries should go through the session engine.
+    """
+    return neighbor_packed(pack_point_bvh(bvh), queries, depth, k,
+                           mode=mode, max_rounds=max_rounds,
+                           interpret=interpret)
 
 
 def traverse_fused(bvh: BVH4, rays: Ray, depth: int, *,

@@ -32,7 +32,7 @@ import pytest
 pytest.importorskip("hypothesis", reason="install via requirements-dev.txt")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.api import Scene, VectorIndex, make_ray
+from repro.api import PointCloudScene, Scene, VectorIndex, make_ray
 from repro.core import (Triangle, knn, radius_count, radius_search,
                         trace_rays, trace_wavefront)
 
@@ -202,6 +202,96 @@ def test_fuzz_pallas_backend_rank_equivalent(db_seed, q_seed, n_q, metric):
     picked = np.take_along_axis(oracle_scores, np.asarray(got.indices), 1)
     np.testing.assert_allclose(picked, np.asarray(ref.scores),
                                rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# tree-backed neighbor path: engines vs each other (bit) and the oracle
+# ---------------------------------------------------------------------------
+
+CLOUD_SIZES = (5, 61, 230)
+CLOUD_RADII = (0.0, 0.5, 1.25)
+NEIGHBOR_FIELDS = ("dist_sq", "index", "valid", "count", "box_jobs",
+                   "point_jobs")
+
+_clouds: dict = {}
+
+
+def _cloud(seed, n, builder):
+    key = (seed, n, builder)
+    if key not in _clouds:
+        rng = np.random.default_rng(3000 * seed + n)
+        pts = jnp.asarray(rng.normal(size=(n, 3)).astype(np.float32))
+        cloud = PointCloudScene.from_points(pts, builder=builder)
+        _clouds[key] = (cloud, cloud.engine(pad_multiple=8, shard=1),
+                        cloud.engine(pad_multiple=8, shard=1, chunk_size=8))
+    return _clouds[key]
+
+
+@given(seed=st.sampled_from(SCENE_SEEDS[:2]),
+       n=st.sampled_from(CLOUD_SIZES),
+       builder=st.sampled_from(BUILDERS),
+       q_seed=st.integers(0, 2**31 - 1),
+       n_q=st.integers(1, 16),
+       radius=st.sampled_from(CLOUD_RADII))
+@settings(max_examples=15, deadline=None)
+def test_fuzz_tree_neighbors_match_brute(seed, n, builder, q_seed, n_q,
+                                         radius):
+    """Both tree backends vs the brute oracle on hypothesis clouds.
+
+    The two tree engines (and the chunked twin) share stage helpers and
+    must bit-match each other, *job counters included*.  Against the
+    brute oracle the leaf test reuses the MXU arithmetic form, but its
+    ``q.c`` term is an elementwise sum rather than a HIGHEST-precision
+    ``jnp.dot`` — a ~1-ulp contraction difference — so membership is
+    compared exactly away from the radius boundary and left free inside
+    a +-tol band (deterministic-seed exactness lives in
+    ``test_neighbor.py``).
+    """
+    cloud, engine, chunked = _cloud(seed, n, builder)
+    rng = np.random.default_rng(q_seed)
+    q = jnp.asarray(rng.normal(size=(n_q, 3)).astype(np.float32))
+
+    # k = N so the record can hold every in-radius point: set comparisons
+    # are meaningful (k < count would truncate legitimately)
+    ref = engine.neighbor_search(q, n, radius=radius,
+                                 backend="tree_wavefront")
+    others = {
+        "tree_pallas": engine.neighbor_search(q, n, radius=radius,
+                                              backend="tree_pallas"),
+        "tree_wavefront/chunked": chunked.neighbor_search(
+            q, n, radius=radius, backend="tree_wavefront"),
+    }
+    for name, rec in others.items():
+        for f in NEIGHBOR_FIELDS:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(rec, f)), np.asarray(getattr(ref, f)),
+                err_msg=f"{name}: {f}")
+        assert int(rec.rounds) == int(ref.rounds), name
+
+    oracle = np.asarray(engine.scores(q, "euclidean", backend="mxu"))
+    r_sq = radius * radius
+    tol = 1e-5 * (1.0 + r_sq)
+    w = np.asarray(ref.valid)
+    idx = np.asarray(ref.index)
+    for i in range(n_q):
+        got = set(idx[i][w[i]])
+        must = set(np.flatnonzero(oracle[i] <= r_sq - tol))
+        may = set(np.flatnonzero(oracle[i] <= r_sq + tol))
+        assert must <= got <= may, (i, got, must, may)
+    counts = np.asarray(ref.count)
+    assert ((oracle <= r_sq - tol).sum(1) <= counts).all()
+    assert (counts <= (oracle <= r_sq + tol).sum(1)).all()
+
+    # nearest: rank-equivalent vs the brute top-k (near-ties may permute
+    # under the contraction difference, so compare through oracle scores)
+    k = min(5, n)
+    brute = engine.nearest(q, k, backend="mxu")
+    for backend in ("tree_wavefront", "tree_pallas"):
+        tree = engine.nearest(q, k, backend=backend)
+        picked = np.take_along_axis(oracle, np.asarray(tree.indices), 1)
+        np.testing.assert_allclose(picked, np.asarray(brute.scores),
+                                   rtol=1e-4, atol=1e-5,
+                                   err_msg=backend)
 
 
 # ---------------------------------------------------------------------------

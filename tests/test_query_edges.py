@@ -1,0 +1,287 @@
+"""Edge cases of the hardened query surface (regression suite).
+
+Each group here pins one of the hardening fixes and fails on the
+pre-fix code:
+
+* ``k > N`` used to crash inside ``lax.top_k``; it is now clamped to the
+  database size with the excess slots padded (``inf``/``-inf`` score,
+  index ``-1``, ``valid``/``within`` False) — on the brute backends AND
+  the tree-backed neighbor path.
+* ``k <= 0`` and NaN / negative euclidean radii used to silently produce
+  zero-width or empty results; they now raise ``ValueError`` eagerly,
+  before anything compiles.
+* zero-norm cosine vectors used to score ``0/eps`` garbage (NaN without
+  the clamp) that ``top_k`` sorted *first*; they are now pinned to
+  ``-inf`` and rank strictly last.
+
+Plus the benign edges that must keep working: ``radius == 0``, empty
+query batches, and duplicate database points — across every distance
+backend (``mxu`` / ``pallas``) and both tree backends
+(``tree_wavefront`` / ``tree_pallas``).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import PointCloudScene, VectorIndex
+from repro.core import radius_count, radius_search
+from repro.core.knn import (check_k, check_radius, cosine_similarity, knn,
+                            select_topk, select_within)
+
+BRUTE = ("mxu", "pallas")
+TREE = ("tree_wavefront", "tree_pallas")
+
+N_DB, DIM = 37, 8
+N_PTS = 50
+
+
+@pytest.fixture(scope="module")
+def engine():
+    rng = np.random.default_rng(11)
+    db = jnp.asarray(rng.normal(size=(N_DB, DIM)).astype(np.float32))
+    return VectorIndex.from_database(db).engine(pad_multiple=8, shard=1)
+
+
+@pytest.fixture(scope="module")
+def cloud_engine():
+    rng = np.random.default_rng(12)
+    pts = jnp.asarray(rng.normal(size=(N_PTS, 3)).astype(np.float32))
+    return PointCloudScene.from_points(pts).engine(pad_multiple=8, shard=1)
+
+
+@pytest.fixture(scope="module")
+def dup_cloud_engine():
+    # integer coordinates: the MXU form ||q||^2 - 2 q.c + ||c||^2 is exact
+    # in f32 on small ints, so duplicates sit at *exactly* d^2 == 0 and the
+    # radius == 0 / duplicate tests are deterministic, not boundary-lucky
+    rng = np.random.default_rng(13)
+    pts = rng.integers(0, 7, size=(30, 3)).astype(np.float32)
+    pts[0] = pts[1] = pts[2] = (2.0, 3.0, 1.0)  # known triplicate
+    return PointCloudScene.from_points(jnp.asarray(pts)).engine(
+        pad_multiple=8, shard=1)
+
+
+def _queries(n=5, dim=DIM, seed=21):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(n, dim)).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# k > N: clamped + padded, never a top_k crash
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BRUTE)
+def test_k_exceeds_db_pads_brute(engine, backend):
+    q = _queries()
+    k = N_DB + 11
+    res = engine.nearest(q, k, backend=backend)
+    assert res.scores.shape == (5, k)
+    got_valid = np.asarray(res.valid)
+    assert got_valid[:, :N_DB].all() and not got_valid[:, N_DB:].any()
+    assert (np.asarray(res.indices)[:, N_DB:] == -1).all()
+    assert np.isposinf(np.asarray(res.scores)[:, N_DB:]).all()
+    # the real slots exhaust the database, each index exactly once
+    for row in np.asarray(res.indices)[:, :N_DB]:
+        assert set(row) == set(range(N_DB))
+
+    big = engine.within(q, 1e6, k, backend=backend)
+    assert np.asarray(big.within)[:, :N_DB].all()
+    assert not np.asarray(big.within)[:, N_DB:].any()
+
+
+def test_k_exceeds_db_pads_cosine(engine):
+    # cosine is a similarity: pad slots carry -inf, still strictly last
+    res = engine.nearest(_queries(), N_DB + 3, "cosine", backend="mxu")
+    assert np.isneginf(np.asarray(res.scores)[:, N_DB:]).all()
+    assert not np.asarray(res.valid)[:, N_DB:].any()
+
+
+@pytest.mark.parametrize("backend", TREE)
+def test_k_exceeds_cloud_pads_tree(cloud_engine, backend):
+    q = _queries(4, 3, seed=22)
+    k = N_PTS + 14
+    res = cloud_engine.nearest(q, k, backend=backend)
+    assert res.scores.shape == (4, k)
+    got_valid = np.asarray(res.valid)
+    assert got_valid[:, :N_PTS].all() and not got_valid[:, N_PTS:].any()
+    assert (np.asarray(res.indices)[:, N_PTS:] == -1).all()
+    assert np.isposinf(np.asarray(res.scores)[:, N_PTS:]).all()
+    for row in np.asarray(res.indices)[:, :N_PTS]:
+        assert set(row) == set(range(N_PTS))
+
+    big = cloud_engine.within(q, 1e3, k, backend=backend)
+    assert np.asarray(big.within)[:, :N_PTS].all()
+    assert not np.asarray(big.within)[:, N_PTS:].any()
+
+
+def test_k_exceeds_free_functions():
+    rng = np.random.default_rng(23)
+    db = jnp.asarray(rng.normal(size=(9, 4)).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(3, 4)).astype(np.float32))
+    scores, idx = knn(q, db, k=20)
+    assert scores.shape == (3, 20) and (np.asarray(idx)[:, 9:] == -1).all()
+    s, i, w = radius_search(q, db, radius=1e6, k=20)
+    assert np.asarray(w)[:, :9].all() and not np.asarray(w)[:, 9:].any()
+
+
+# ---------------------------------------------------------------------------
+# k <= 0 and bad radii: eager ValueError on every entry point
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("k", (0, -2))
+def test_nonpositive_k_raises(engine, cloud_engine, k):
+    q, q3 = _queries(), _queries(3, 3)
+    with pytest.raises(ValueError, match="k must be"):
+        engine.nearest(q, k)
+    with pytest.raises(ValueError, match="k must be"):
+        engine.within(q, 1.0, k)
+    with pytest.raises(ValueError, match="k must be"):
+        cloud_engine.nearest(q3, k, backend="tree_wavefront")
+    with pytest.raises(ValueError, match="k must be"):
+        cloud_engine.neighbor_search(q3, k, radius=1.0)
+    with pytest.raises(ValueError, match="k must be"):
+        knn(q, jnp.zeros((4, DIM)), k)
+    with pytest.raises(ValueError, match="k must be"):
+        select_topk(jnp.zeros((2, 4)), k)
+    with pytest.raises(ValueError, match="k must be"):
+        check_k(k)
+
+
+@pytest.mark.parametrize("radius", (float("nan"), -0.25))
+def test_bad_euclidean_radius_raises(engine, cloud_engine, radius):
+    q, q3 = _queries(), _queries(3, 3)
+    db = jnp.zeros((4, DIM))
+    for call in (
+        lambda: engine.within(q, radius, 4),
+        lambda: engine.count_within(q, radius),
+        lambda: cloud_engine.within(q3, radius, 4,
+                                    backend="tree_wavefront"),
+        lambda: cloud_engine.count_within(q3, radius,
+                                          backend="tree_pallas"),
+        lambda: cloud_engine.neighbor_search(q3, 4, radius=radius),
+        lambda: radius_search(q, db, radius, 4),
+        lambda: radius_count(q, db, radius),
+        lambda: select_within(jnp.zeros((2, 4)), radius, 2),
+        lambda: check_radius(radius),
+    ):
+        with pytest.raises(ValueError, match="radius"):
+            call()
+
+
+def test_negative_cosine_radius_is_legal(engine):
+    # a cosine radius is a *minimum similarity*: "at least -0.5 similar"
+    q = _queries()
+    res = engine.within(q, -0.5, N_DB, "cosine", backend="mxu")
+    sims = np.asarray(engine.scores(q, "cosine", backend="mxu"))
+    np.testing.assert_array_equal(
+        np.asarray(res.within).sum(axis=1), (sims >= -0.5).sum(axis=1))
+
+
+# ---------------------------------------------------------------------------
+# radius == 0 and duplicate points: exact, consistent across paths
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BRUTE + TREE)
+def test_radius_zero_and_duplicates(dup_cloud_engine, backend):
+    eng = dup_cloud_engine
+    q = jnp.asarray([[2.0, 3.0, 1.0], [50.0, 50.0, 50.0]], jnp.float32)
+    counts = np.asarray(eng.count_within(q, 0.0, backend=backend))
+    assert counts[0] == 3  # the triplicate, at exactly d^2 == 0
+    assert counts[1] == 0
+
+    res = eng.within(q, 0.0, 8, backend=backend)
+    w = np.asarray(res.within)
+    assert set(np.asarray(res.indices)[0][w[0]]) == {0, 1, 2}
+    assert not w[1].any()
+    assert (np.asarray(res.scores)[0][w[0]] == 0.0).all()
+
+
+@pytest.mark.parametrize("backend", BRUTE + TREE)
+def test_duplicate_points_nearest(dup_cloud_engine, backend):
+    res = dup_cloud_engine.nearest(
+        jnp.asarray([[2.0, 3.0, 1.0]], jnp.float32), 3, backend=backend)
+    assert set(np.asarray(res.indices)[0]) == {0, 1, 2}
+    assert (np.asarray(res.scores)[0] == 0.0).all()
+    assert np.asarray(res.valid).all()
+
+
+# ---------------------------------------------------------------------------
+# empty query batch: typed empty results, nothing compiled
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BRUTE)
+def test_empty_batch_brute(engine, backend):
+    q = jnp.zeros((0, DIM), jnp.float32)
+    res = engine.nearest(q, 4, backend=backend)
+    assert res.scores.shape == (0, 4) and res.valid.shape == (0, 4)
+    win = engine.within(q, 1.0, 4, backend=backend)
+    assert win.within.shape == (0, 4)
+    assert engine.count_within(q, 1.0, backend=backend).shape == (0,)
+
+
+@pytest.mark.parametrize("backend", TREE)
+def test_empty_batch_tree(cloud_engine, backend):
+    q = jnp.zeros((0, 3), jnp.float32)
+    res = cloud_engine.nearest(q, 4, backend=backend)
+    assert res.scores.shape == (0, 4) and res.valid.shape == (0, 4)
+    rec = cloud_engine.neighbor_search(q, 4, radius=1.0, backend=backend)
+    assert rec.count.shape == (0,) and rec.box_jobs.shape == (0,)
+    assert int(rec.rounds) == 0
+
+
+# ---------------------------------------------------------------------------
+# zero-norm cosine vectors: -inf, rank strictly last, never NaN
+# ---------------------------------------------------------------------------
+
+ZERO_ROW = 5
+
+
+@pytest.fixture(scope="module")
+def zero_engine():
+    rng = np.random.default_rng(31)
+    db = rng.normal(size=(24, DIM)).astype(np.float32)
+    db[ZERO_ROW] = 0.0
+    return VectorIndex.from_database(jnp.asarray(db)).engine(
+        pad_multiple=8, shard=1)
+
+
+@pytest.mark.parametrize("backend", BRUTE)
+def test_zero_norm_cosine_ranks_last(zero_engine, backend):
+    q = np.random.default_rng(32).normal(size=(6, DIM)).astype(np.float32)
+    q[2] = 0.0  # degenerate query row too
+    q = jnp.asarray(q)
+
+    sims = np.asarray(zero_engine.scores(q, "cosine", backend=backend))
+    assert not np.isnan(sims).any()
+    assert np.isneginf(sims[:, ZERO_ROW]).all()  # zero-norm db column
+    assert np.isneginf(sims[2]).all()  # zero-norm query row
+
+    res = zero_engine.nearest(q, 24, "cosine", backend=backend)
+    idx = np.asarray(res.indices)
+    assert not np.isnan(np.asarray(res.scores)).any()
+    # the zero-norm vector is in the k-th (last) slot for every
+    # well-defined query — strictly below every real similarity
+    for row in (0, 1, 3, 4, 5):
+        assert idx[row, -1] == ZERO_ROW
+
+    # a minimum-similarity radius, even a negative one, never admits it
+    win = zero_engine.within(q, -1.0, 24, "cosine", backend=backend)
+    w = np.asarray(win.within)
+    assert not w[:, -1].any() or not np.isin(
+        ZERO_ROW, np.asarray(win.indices)[w])
+    assert not w[2].any()  # degenerate query matches nothing
+
+
+def test_zero_norm_cosine_free_function():
+    db = np.zeros((4, 3), np.float32)
+    db[0] = (1.0, 0.0, 0.0)
+    q = jnp.asarray([[1.0, 0.0, 0.0], [0.0, 0.0, 0.0]], jnp.float32)
+    sims = np.asarray(cosine_similarity(q, jnp.asarray(db)))
+    assert not np.isnan(sims).any()
+    np.testing.assert_array_equal(np.isneginf(sims[0]),
+                                  [False, True, True, True])
+    assert np.isneginf(sims[1]).all()
