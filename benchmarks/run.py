@@ -6,15 +6,21 @@ randomized soak = §I, traversal = the RayCore workload, kNN = the
 generalized modes, model smoke = framework sanity).  The roofline analysis
 (production mesh) is separate: ``python -m benchmarks.roofline --all``.
 
-``--json PATH`` additionally writes the rows as machine-readable JSON
-(``name``, ``us_per_call``, parsed ``derived`` metrics) so the perf
-trajectory can be tracked across PRs — CI uploads ``BENCH_quick.json`` as
-an artifact on every run.
+``--json PATH`` additionally writes the rows as machine-readable JSON so
+the perf trajectory can be tracked across PRs; ``--quick`` writes
+``BENCH_quick.json`` at the repo root even without ``--json`` (CI uploads
+it as an artifact on every run).  Every JSON row carries the provenance
+columns the trajectory needs to be comparable across machines and
+commits: ``device`` (platform kind + count), ``jax_version``, and
+``git_rev``, alongside ``name``, ``us_per_call``, and the parsed
+``derived`` metrics.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
 
 
 def _split_top_level(s: str, sep: str = ";") -> list:
@@ -54,34 +60,70 @@ def parse_derived(derived: str) -> dict:
     return out
 
 
+def _git_rev() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def provenance() -> dict:
+    """The stable per-row schema columns: where/what produced the row."""
+    import jax
+    return {
+        "device": f"{jax.devices()[0].platform}x{jax.local_device_count()}",
+        "jax_version": jax.__version__,
+        "git_rev": _git_rev(),
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
-                    help="skip the slower model-stack section")
+                    help="skip the slower model-stack section and write "
+                         "BENCH_quick.json at the repo root")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write the rows as machine-readable JSON")
     args = ap.parse_args()
 
-    from . import bench_build, bench_datapath, bench_knn, bench_traversal
+    json_path = args.json
+    if json_path is None and args.quick:
+        # --quick always leaves the trajectory artifact behind, wherever
+        # it was launched from
+        json_path = os.path.join(
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            "BENCH_quick.json")
+
+    from . import (bench_build, bench_datapath, bench_knn, bench_serving,
+                   bench_traversal)
 
     rows: list[tuple] = []
+    prov = provenance()
 
     def flush():
         # incremental JSON: rewrite after every section so a crash in a
         # later benchmark still leaves the completed rows on disk (CI
         # uploads the file unconditionally — a partial trajectory beats
         # an empty artifact)
-        if not args.json:
+        if not json_path:
             return
-        payload = [{"name": name, "us_per_call": round(us, 3),
-                    "derived": parse_derived(derived)}
+        payload = [dict(name=name, us_per_call=round(us, 3),
+                        derived=parse_derived(derived), **prov)
                    for name, us, derived in rows]
-        with open(args.json, "w") as f:
+        with open(json_path, "w") as f:
             json.dump(payload, f, indent=2)
             f.write("\n")
 
+    flush()  # schema-stable empty file exists from the first moment
     sections = [bench_datapath.run, bench_traversal.run, bench_build.run,
-                bench_knn.run]
+                bench_knn.run,
+                lambda rows: bench_serving.run(rows, n_requests=120,
+                                               qps=1000.0)
+                if args.quick else bench_serving.run(rows)]
     if not args.quick:
         from . import bench_models
         sections.append(bench_models.run)
@@ -92,8 +134,8 @@ def main():
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.3f},{derived}")
-    if args.json:
-        print(f"wrote {len(rows)} rows to {args.json}")
+    if json_path:
+        print(f"wrote {len(rows)} rows to {json_path}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,139 @@
+"""Serve ray queries: continuous batching over a live QueryEngine.
+
+A minimal asyncio client/server demo of the serving subsystem
+(DESIGN.md §10).  One ``QueryEngine`` holds both a triangle scene and a
+point cloud; a ``QueryServer`` wraps it; many concurrent "users" each
+fire a handful of tiny requests — rays to trace, points to look up —
+over mixed methods.  The server coalesces them into full lane-multiple
+batches, executes each batch as one engine call, and splits the
+responses back per request, **bit-identical** to what a direct
+per-request engine call returns (this script asserts it for every
+response, job counters included).
+
+Run:  PYTHONPATH=src python examples/serve_queries.py [--users 12]
+          [--requests 4] [--max-wait-ms 5]
+"""
+import argparse
+import asyncio
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import PointCloudScene, QueryEngine, Scene, make_ray
+from repro.serving import QueryServer
+
+TRACE_FIELDS = ("t", "tri_index", "hit", "quadbox_jobs", "triangle_jobs")
+
+
+def build_engine(rng):
+    """A triangle soup for trace + a point cloud for neighbor queries,
+    served by one engine (sharded over whatever mesh is available)."""
+    n_tri = 250
+    ctr = rng.uniform(-1, 1, (n_tri, 3)).astype(np.float32)
+    d1 = rng.normal(scale=0.12, size=(n_tri, 3)).astype(np.float32)
+    d2 = rng.normal(scale=0.12, size=(n_tri, 3)).astype(np.float32)
+    scene = Scene.from_triangles(np.stack([ctr, ctr + d1, ctr + d2], 1))
+    cloud = PointCloudScene.from_points(
+        rng.normal(size=(1024, 3)).astype(np.float32))
+    return QueryEngine(scene=scene, cloud=cloud, pad_multiple=8,
+                       shard="auto")
+
+
+def make_jobs(rng, n_users, n_requests):
+    """Each user's little mixed workload: some rays, some lookups."""
+    jobs = []
+    for u in range(n_users):
+        for r in range(n_requests):
+            n = int(rng.integers(1, 7))
+            kind = ("trace", "nearest", "trace", "count_within")[r % 4]
+            if kind == "trace":
+                org = rng.uniform(-3, -2, (n, 3)).astype(np.float32)
+                tgt = rng.uniform(-0.5, 0.5, (n, 3)).astype(np.float32)
+                rays = make_ray(jnp.asarray(org), jnp.asarray(tgt - org))
+                jobs.append((u, "trace", rays,
+                             {"ray_type": ("closest", "any", "shadow")[u % 3]}))
+            elif kind == "nearest":
+                q = jnp.asarray(rng.normal(size=(n, 3)).astype(np.float32))
+                jobs.append((u, "nearest", q, {"k": 4}))
+            else:
+                q = jnp.asarray(rng.normal(size=(n, 3)).astype(np.float32))
+                jobs.append((u, "count_within", q, {"radius": 0.6}))
+    return jobs
+
+
+async def user_session(server, my_jobs):
+    """One client: fire requests concurrently, await the responses."""
+    tasks = [asyncio.ensure_future(
+        getattr(server, kind)(payload, **kw))
+        for _, kind, payload, kw in my_jobs]
+    return await asyncio.gather(*tasks)
+
+
+def check_parity(engine, jobs, responses):
+    """Every served response must be bit-identical to a direct call."""
+    for (_, kind, payload, kw), got in zip(jobs, responses):
+        ref = getattr(engine, kind)(payload, **kw)
+        if kind == "trace":
+            for f in TRACE_FIELDS:
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(got, f)),
+                    np.asarray(getattr(ref, f)), err_msg=f"trace {f}")
+            assert int(got.rounds) == int(ref.rounds)
+        elif kind == "count_within":
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+        else:
+            np.testing.assert_array_equal(np.asarray(got.indices),
+                                          np.asarray(ref.indices))
+            np.testing.assert_array_equal(np.asarray(got.scores),
+                                          np.asarray(ref.scores))
+
+
+async def main_async(args):
+    rng = np.random.default_rng(0)
+    engine = build_engine(rng)
+    jobs = make_jobs(rng, args.users, args.requests)
+    print(f"devices={jax.local_device_count()}  "
+          f"users={args.users}  requests={len(jobs)}")
+
+    async with QueryServer(engine, max_batch_rows=64,
+                           max_wait=args.max_wait_ms * 1e-3) as server:
+        per_user = [[j for j in jobs if j[0] == u]
+                    for u in range(args.users)]
+        results = await asyncio.gather(
+            *[user_session(server, mine) for mine in per_user])
+        stats = server.stats()
+
+    flat = [r for user in per_user for r in user]
+    responses = [r for user_res in results for r in user_res]
+    check_parity(engine, flat, responses)
+    print("bit-parity vs direct engine calls: OK "
+          f"({len(responses)} responses)")
+
+    print(f"{'method':>14} {'reqs':>5} {'batches':>7} {'req/batch':>9} "
+          f"{'fill':>5} {'p50ms':>7} {'p99ms':>7}  flushes")
+    for method in sorted(stats):
+        s = stats[method]
+        flushes = (f"full={s.flush_full} timer={s.flush_timer} "
+                   f"deadline={s.flush_deadline} drain={s.flush_drain}")
+        print(f"{method:>14} {s.requests:>5} {s.batches:>7} "
+              f"{s.requests_per_batch:>9.2f} {s.mean_fill:>5.2f} "
+              f"{s.p50_ms:>7.2f} {s.p99_ms:>7.2f}  {flushes}")
+    occupancy = (sum(s.requests for s in stats.values())
+                 / max(1, sum(s.batches for s in stats.values())))
+    print(f"overall requests/batch: {occupancy:.2f}")
+    assert occupancy > 1.0, "coalescing never batched requests together"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--users", type=int, default=12)
+    ap.add_argument("--requests", type=int, default=4,
+                    help="requests per user")
+    ap.add_argument("--max-wait-ms", type=float, default=5.0)
+    args = ap.parse_args()
+    asyncio.run(main_async(args))
+
+
+if __name__ == "__main__":
+    main()

@@ -36,6 +36,7 @@ The execution pipeline for one query is::
 from __future__ import annotations
 
 import math
+import numbers
 from typing import NamedTuple, Optional
 
 import jax
@@ -56,24 +57,42 @@ def available_devices() -> int:
     return jax.local_device_count()
 
 
+def check_count(name: str, value, minimum: int = 1) -> Optional[int]:
+    """Eagerly validate an integral execution knob (``shard`` /
+    ``chunk_size``): ``None`` passes through (= knob unset); anything else
+    must be a true integer (no bools, no floats — ``chunk_size=2.5`` used
+    to silently truncate inside the plan math) that is ``>= minimum``.
+    Returns the value as a plain ``int``."""
+    if value is None:
+        return None
+    if isinstance(value, bool) or not isinstance(value, numbers.Integral):
+        raise ValueError(
+            f"{name} must be an int >= {minimum}, got {value!r} "
+            f"({type(value).__name__})")
+    if value < minimum:
+        raise ValueError(f"{name} must be >= {minimum}, got {value!r}")
+    return int(value)
+
+
 def resolve_shards(shard, n_rows: Optional[int] = None) -> int:
     """``shard="auto" | int | None`` -> a concrete shard count.
 
     ``"auto"`` learns the local device count (capped at the batch size —
     a 3-ray batch on 8 devices gains nothing from 5 idle replicas);
-    an explicit int is honored as-is but must not exceed the device count.
+    an explicit value must be a positive integer (validated eagerly, at
+    call time) and must not exceed the device count.
     """
-    if shard is None or shard == 1:
+    if shard is None:
         return 1
-    n_dev = available_devices()
     if shard == "auto":
-        shards = n_dev
+        shards = available_devices()
         if n_rows is not None:
             shards = max(1, min(shards, n_rows))
         return shards
-    shards = int(shard)
-    if shards < 1:
-        raise ValueError(f"shard must be >= 1, got {shard!r}")
+    shards = check_count("shard", shard)
+    if shards == 1:
+        return 1
+    n_dev = available_devices()
     if shards > n_dev:
         raise ValueError(
             f"shard={shards} exceeds the {n_dev} available device(s)")
@@ -159,11 +178,10 @@ def make_plan(n: int, *, pad_multiple: int, shards: int = 1,
     """
     if n <= 0:
         raise ValueError("make_plan needs n >= 1; guard empty batches first")
-    if chunk_size is not None and int(chunk_size) < 1:
-        raise ValueError(f"chunk_size must be >= 1, got {chunk_size!r}")
+    chunk_size = check_count("chunk_size", chunk_size)
     multiple = (pad_multiple if lane_multiple is None
                 else max(pad_multiple, int(lane_multiple)))
-    rows = n if chunk_size is None else min(int(chunk_size), n)
+    rows = n if chunk_size is None else min(chunk_size, n)
     per_shard = ceil_to(math.ceil(rows / shards), multiple)
     block = per_shard * shards
     return ExecPlan(n=n, block=block, n_blocks=-(-n // block), shards=shards)
@@ -185,6 +203,28 @@ def split_blocks(tree, plan: ExecPlan):
         if mesh is not None:
             chunk = batch_sharded(mesh, chunk, BATCH_AXIS)
         yield chunk
+
+
+def slice_rows(tree, sizes):
+    """Split per-row leaves into consecutive row groups of ``sizes`` —
+    the batch-slice/unpad contract the serving coalescer reuses
+    (``repro.serving.batching``): a response computed for a coalesced
+    batch is handed back per request by slicing the same row ranges that
+    were concatenated on the way in.  Rows beyond ``sum(sizes)`` (lane
+    padding) are dropped, so ``slice_rows(padded_result, [n])[0]`` is
+    exactly the unpad step of :func:`concat_rows`.  Row independence —
+    the property every backend already guarantees for pad -> query ->
+    unpad — is what makes this split bit-exact per request."""
+    out, lo = [], 0
+    for s in sizes:
+        s = int(s)
+        if s < 0:
+            raise ValueError(f"slice sizes must be >= 0, got {s}")
+        hi = lo + s
+        out.append(jax.tree_util.tree_map(
+            lambda x, lo=lo, hi=hi: x[lo:hi], tree))
+        lo = hi
+    return out
 
 
 def concat_rows(blocks: list, n: int):

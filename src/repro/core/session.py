@@ -59,6 +59,7 @@ from .build.quality import TreeStats
 from .bvh import BVH4
 from .dispatch import (
     ExecPlan,
+    check_count,
     concat_rows,
     make_plan,
     replicated,
@@ -757,8 +758,13 @@ class QueryEngine:
         self._index = index
         self.cloud = cloud
         self.default_backend = backend
+        # execution knobs are validated eagerly, here and per call — a bad
+        # chunk_size/shard must never flow silently into the plan math
+        # (floats used to truncate; 0 used to slip past empty batches)
+        if shard not in (None, "auto"):
+            check_count("shard", shard)
         self.default_shard = shard
-        self.default_chunk_size = chunk_size
+        self.default_chunk_size = check_count("chunk_size", chunk_size)
         self.pad_multiple = (default_pad_multiple() if pad_multiple is None
                              else max(1, int(pad_multiple)))
         self.interpret = interpret  # None = auto (off-TPU -> interpret)
@@ -906,6 +912,86 @@ class QueryEngine:
         return make_plan(n, pad_multiple=self.pad_multiple, shards=shards,
                          chunk_size=chunk_size, lane_multiple=lane_multiple)
 
+    # -- plan introspection (what the serving coalescer sizes batches by) --
+
+    #: the query methods the serving layer coalesces (one bucket space per
+    #: method; ``repro.serving.query_server`` exposes exactly these)
+    SERVABLE_METHODS = ("trace", "nearest", "within", "count_within",
+                        "scores")
+
+    def _method_lane_multiple(self, method: str, backend: str | None, *,
+                              ray_type: str = "closest",
+                              metric: str = "euclidean", n: int = 1 << 20,
+                              k: int | None = None,
+                              radius: float | None = None) -> int | None:
+        """The backend-declared tile width a ``method`` query would pad
+        to (None = no hard tile; the plain pad multiple applies).
+        ``backend=None/"auto"`` resolves through the same auto policy the
+        query itself would use, with a large nominal ``n`` so tiny-batch
+        special cases don't leak into sizing decisions."""
+        name = backend or self.default_backend
+        if method == "trace":
+            if name == "auto":
+                name = self.resolve_trace_backend(ray_type, n)
+            if name not in _TRACE_BACKENDS:
+                raise ValueError(f"unknown trace backend {name!r} "
+                                 f"(registered: {trace_backends()})")
+            return _TRACE_BACKENDS[name][2]
+        if method in ("nearest", "within", "count_within", "scores"):
+            if name == "auto":
+                if method == "scores" or (method != "nearest"
+                                          and radius is None):
+                    # scores is brute-only; a radius query introspected
+                    # without its radius can't be selectivity-routed —
+                    # assume the brute path (no hard tile) conservatively
+                    name = self.resolve_distance_backend()
+                else:
+                    name = self.resolve_neighbor_backend(
+                        method, metric, k=k, radius=radius)
+            if name in _NEIGHBOR_BACKENDS:
+                return _NEIGHBOR_BACKENDS[name][1]
+            if name in _DISTANCE_BACKENDS:
+                return None
+            raise ValueError(
+                f"unknown distance/neighbor backend {name!r} (registered: "
+                f"{distance_backends() + neighbor_backends()})")
+        raise ValueError(f"unknown query method {method!r} "
+                         f"(servable: {self.SERVABLE_METHODS})")
+
+    def batch_multiple(self, method: str = "trace",
+                       backend: str | None = None, *,
+                       ray_type: str = "closest",
+                       metric: str = "euclidean", k: int | None = None,
+                       radius: float | None = None) -> int:
+        """The effective per-shard row multiple queries of ``method`` are
+        padded to — ``max(pad_multiple, backend tile width)``.  The
+        serving coalescer sizes its batch targets with this so a flushed
+        batch fills whole lanes/tiles instead of padding them away."""
+        lane = self._method_lane_multiple(method, backend,
+                                          ray_type=ray_type, metric=metric,
+                                          k=k, radius=radius)
+        return max(self.pad_multiple, lane or 1)
+
+    def plan_for(self, method: str, n: int, *,
+                 backend: str | None = None, ray_type: str = "closest",
+                 metric: str = "euclidean", k: int | None = None,
+                 radius: float | None = None, shard=None,
+                 chunk_size: int | None = None) -> ExecPlan:
+        """Introspection: the :class:`~repro.core.dispatch.ExecPlan` an
+        ``n``-row ``method`` query would execute under — without
+        dispatching anything.  The serving layer uses ``plan.block`` (the
+        padded rows actually executed) to quantize batch shapes and to
+        report batch occupancy; callers get the same plan the query path
+        itself builds, so the numbers cannot drift."""
+        if n < 1:
+            raise ValueError(f"plan_for needs n >= 1, got {n}")
+        shards = self._resolve_shards(shard, n)
+        chunk_size = check_count("chunk_size", chunk_size)
+        lane = self._method_lane_multiple(method, backend,
+                                          ray_type=ray_type, metric=metric,
+                                          n=n, k=k, radius=radius)
+        return self._plan(n, shards, chunk_size, lane_multiple=lane)
+
     def _placed_scene(self, plan: ExecPlan) -> "Scene":
         """The scene with its BVH replicated across the plan's mesh
         (placed once per shard count and scene version — a refit bumps the
@@ -1014,6 +1100,7 @@ class QueryEngine:
         t_min = float(t_min)
         n = rays.origin.shape[0]
         shards = self._resolve_shards(shard, n)
+        chunk_size = check_count("chunk_size", chunk_size)
         name = backend or self.default_backend
         if name == "auto":
             name = self.resolve_trace_backend(ray_type, n, t_min, max_rounds,
@@ -1091,6 +1178,7 @@ class QueryEngine:
         q = jnp.asarray(queries)
         n = q.shape[0]
         shards = self._resolve_shards(shard, n)  # validates before guard
+        chunk_size = check_count("chunk_size", chunk_size)
         if n == 0:  # empty guard: typed empty result, nothing compiled
             return empty()
         plan = self._plan(n, shards, chunk_size)
@@ -1132,6 +1220,7 @@ class QueryEngine:
         kk = max(1, min(int(k), self.cloud.size))
         n = q.shape[0]
         shards = self._resolve_shards(shard, n)
+        chunk_size = check_count("chunk_size", chunk_size)
         if n == 0:  # empty guard: typed empty result, nothing compiled
             z = jnp.zeros((0,), jnp.int32)
             return NeighborRecord(

@@ -225,3 +225,85 @@ assert count[0] == 0, "sharded chunked re-query retraced"
 assert engine.cache_info().hits == 1
 print("sharded chunk cache reuse OK")
 """, n_devices=8)
+
+
+# ---------------------------------------------------------------------------
+# eager count validation + the serving batch-slice contract
+# ---------------------------------------------------------------------------
+
+def test_check_count_rejects_bad_values():
+    from repro.core.dispatch import check_count
+    assert check_count("chunk_size", None) is None
+    assert check_count("chunk_size", 7) == 7
+    assert check_count("shard", np.int64(3)) == 3  # any Integral is fine
+    for bad in (0, -1, 2.5, True, "4"):
+        with pytest.raises(ValueError, match="chunk_size"):
+            check_count("chunk_size", bad)
+
+
+def test_plan_strict_count_types():
+    """Counts must be real integers — no silent float truncation, and no
+    bool-as-int (shard=True used to mean shard=1)."""
+    with pytest.raises(ValueError, match="chunk_size"):
+        make_plan(10, pad_multiple=8, chunk_size=2.5)
+    with pytest.raises(ValueError, match="shard"):
+        resolve_shards(True)
+    with pytest.raises(ValueError, match="shard"):
+        resolve_shards(1.0)
+
+
+def test_engine_validates_counts_eagerly():
+    """Bad chunk_size/shard raise at call (or construction) time — even
+    for an empty batch, long before any compile or dispatch."""
+    from repro.api import Scene, make_ray
+    rng = np.random.default_rng(0)
+    ctr = rng.uniform(-1, 1, (4, 3)).astype(np.float32)
+    tris = np.stack([ctr, ctr + 0.1, ctr + np.float32([0.1, 0, 0.1])], 1)
+    scene = Scene.from_triangles(tris)
+    with pytest.raises(ValueError, match="chunk_size"):
+        scene.engine(chunk_size=0)
+    with pytest.raises(ValueError, match="shard"):
+        scene.engine(shard=-2)
+    with pytest.raises(ValueError, match="shard"):
+        scene.engine(shard=True)
+    engine = scene.engine(pad_multiple=8)
+    rays0 = make_ray(jnp.zeros((0, 3)), jnp.ones((0, 3)))
+    for bad in (0, -3, 2.5, True):
+        with pytest.raises(ValueError, match="chunk_size"):
+            engine.trace(rays0, chunk_size=bad)  # n=0: still validated
+
+
+def test_slice_rows_splits_and_unpads():
+    from repro.core.dispatch import slice_rows
+    tree = {"a": jnp.arange(12), "b": jnp.arange(24).reshape(12, 2)}
+    parts = slice_rows(tree, [3, 0, 5])  # 8 real rows + 4 pad rows
+    assert [int(p["a"].shape[0]) for p in parts] == [3, 0, 5]
+    np.testing.assert_array_equal(np.asarray(parts[0]["a"]), [0, 1, 2])
+    np.testing.assert_array_equal(np.asarray(parts[2]["a"]),
+                                  [3, 4, 5, 6, 7])  # pad rows 8..11 dropped
+    np.testing.assert_array_equal(np.asarray(parts[2]["b"]),
+                                  np.arange(24).reshape(12, 2)[3:8])
+    with pytest.raises(ValueError, match=">= 0"):
+        slice_rows(tree, [2, -1])
+
+
+def test_engine_plan_introspection():
+    """plan_for/batch_multiple expose the planner the serving layer sizes
+    batches with; the plan must match what a real call would use."""
+    from repro.api import Scene
+    rng = np.random.default_rng(1)
+    ctr = rng.uniform(-1, 1, (4, 3)).astype(np.float32)
+    tris = np.stack([ctr, ctr + 0.1, ctr + np.float32([0.1, 0, 0.1])], 1)
+    engine = Scene.from_triangles(tris).engine(pad_multiple=8, shard=1)
+    m = engine.batch_multiple("trace")
+    assert m >= 8 and m % 8 == 0
+    plan = engine.plan_for("trace", 10)
+    assert plan.n == 10 and plan.block * plan.n_blocks >= 10
+    assert (plan.block * plan.n_blocks) % m == 0
+    # pallas trace pads to its lane width
+    lanes = engine.batch_multiple("trace", "pallas")
+    assert lanes % 128 == 0
+    with pytest.raises(ValueError, match="n >= 1"):
+        engine.plan_for("trace", 0)
+    with pytest.raises(ValueError, match="method"):
+        engine.plan_for("warp", 4)
