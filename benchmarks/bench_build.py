@@ -75,8 +75,9 @@ def run(rows):
             f"batched_rounds={int(rec.rounds)}"))
 
     if "lbvh" in jobs and "sah" in jobs:
+        # derived-only quality row, no timing: us_per_call=None -> null
         rows.append((
-            "build_quality_sah_vs_lbvh", 0.0,
+            "build_quality_sah_vs_lbvh", None,
             f"jobs_ratio={jobs['sah'] / jobs['lbvh']:.3f};"
             f"jobs_saved_per_ray={jobs['lbvh'] - jobs['sah']:.2f}"))
 

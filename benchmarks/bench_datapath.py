@@ -124,7 +124,9 @@ def bench_fu_census(rows):
     for mode, got in census.items():
         want = TABLE_VIII[mode]
         ratio = {k: f"{got[k]}/{want[k]}" for k in want}
-        rows.append((f"fu_census_{mode}", 0.0,
+        # census rows carry no timing: us_per_call=None -> JSON null
+        # (0.0 used to read as "measured and instantaneous")
+        rows.append((f"fu_census_{mode}", None,
                      f"ops_vs_tableVIII(add;mul;cmp)={ratio}"))
     # Known structural deviations vs Table VIII (documented in DESIGN.md):
     # quadbox sign-swaps lower to signbit+select (not FP compares) on TPU,

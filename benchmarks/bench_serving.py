@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api import PointCloudScene, QueryEngine, Scene, make_ray
+from repro.obs import CompileTracker
 from repro.serving import QueryServer
 
 
@@ -120,9 +121,13 @@ def run(rows, *, n_requests=400, qps=2000.0, max_batch_rows=64,
     _warm(engine, jobs, max_batch_rows)
 
     base_s = _run_baseline(engine, jobs)
-    makespan, stats = _run_served(engine, jobs, arrivals,
-                                  max_batch_rows=max_batch_rows,
-                                  max_wait=max_wait)
+    # the served window should be steady state: the quantized ladder was
+    # warmed above, so any jit tracing in here is a regression the
+    # trajectory should show (compiles_measured in the derived column)
+    with CompileTracker() as tracker:
+        makespan, stats = _run_served(engine, jobs, arrivals,
+                                      max_batch_rows=max_batch_rows,
+                                      max_wait=max_wait)
 
     total_req = sum(s.requests for s in stats.values())
     total_batches = sum(s.batches for s in stats.values())
@@ -143,6 +148,7 @@ def run(rows, *, n_requests=400, qps=2000.0, max_batch_rows=64,
         f"requests_per_batch={occupancy:.2f};mean_fill={fill:.2f};"
         f"p50_ms={p50:.2f};p99_ms={p99:.2f};"
         f"batches={total_batches};"
+        f"compiles_measured={tracker.compiles};"
         f"devices={jax.local_device_count()};"
         f"max_batch_rows={max_batch_rows}"))
 

@@ -9,11 +9,28 @@ generalized modes, model smoke = framework sanity).  The roofline analysis
 ``--json PATH`` additionally writes the rows as machine-readable JSON so
 the perf trajectory can be tracked across PRs; ``--quick`` writes
 ``BENCH_quick.json`` at the repo root even without ``--json`` (CI uploads
-it as an artifact on every run).  Every JSON row carries the provenance
-columns the trajectory needs to be comparable across machines and
-commits: ``device`` (platform kind + count), ``jax_version``, and
-``git_rev``, alongside ``name``, ``us_per_call``, and the parsed
-``derived`` metrics.
+it as an artifact on every run).
+
+**Row schema.** Sections append ``(name, us_per_call, derived)`` tuples:
+
+* ``name`` — stable row identifier (the trajectory joins on it).
+* ``us_per_call`` — measured wall microseconds per call, or **None** for
+  rows that report derived metrics only (FU censuses, build-quality
+  ratios).  None serializes as JSON ``null`` and prints as an empty CSV
+  field — never ``0.0``, which would read as "measured and
+  instantaneous" to a trajectory diff.
+* ``derived`` — ``k=v;k=v`` string, parsed into a dict for JSON by
+  :func:`parse_derived`.
+
+Every JSON row additionally carries the provenance columns the
+trajectory needs to be comparable across machines and commits:
+``device`` (platform kind + count), ``jax_version``, and ``git_rev`` —
+plus an ``obs`` column with the telemetry slice of the section that
+produced the row (jit compiles, engine cache hits/misses, pad-waste
+fraction), taken from ``repro.obs`` which this runner enables
+(DESIGN.md §11).  Timings are therefore measured with telemetry *on* —
+the recording overhead is a few counter bumps per engine call, and it is
+identical for every row, so the trajectory stays self-consistent.
 """
 from __future__ import annotations
 
@@ -71,6 +88,26 @@ def _git_rev() -> str:
         return "unknown"
 
 
+def _obs_slice(before: dict, after: dict) -> dict:
+    """The telemetry delta one benchmark section produced: jit compiles,
+    engine compiled-fn cache hits/misses, and the section's pad-waste
+    fraction (``repro.obs.snapshot()`` keys; DESIGN.md §11)."""
+    c0, c1 = before["counters"], after["counters"]
+
+    def delta(key):
+        return c1.get(key, 0) - c0.get(key, 0)
+
+    real = delta("engine.rows.real")
+    padded = delta("engine.rows.padded")
+    return {
+        "compiles": after["jit"]["compiles"] - before["jit"]["compiles"],
+        "cache_hits": delta("engine.cache.hits"),
+        "cache_misses": delta("engine.cache.misses"),
+        "pad_waste_fraction": (round(1.0 - real / padded, 6)
+                               if padded else None),
+    }
+
+
 def provenance() -> dict:
     """The stable per-row schema columns: where/what produced the row."""
     import jax
@@ -98,10 +135,15 @@ def main():
             os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
             "BENCH_quick.json")
 
+    from repro import obs
+
     from . import (bench_build, bench_datapath, bench_knn, bench_serving,
                    bench_traversal)
 
+    obs.enable()  # every row gets its section's telemetry slice
+
     rows: list[tuple] = []
+    obs_cols: list = []  # parallel to rows: the producing section's slice
     prov = provenance()
 
     def flush():
@@ -111,9 +153,11 @@ def main():
         # an empty artifact)
         if not json_path:
             return
-        payload = [dict(name=name, us_per_call=round(us, 3),
-                        derived=parse_derived(derived), **prov)
-                   for name, us, derived in rows]
+        payload = [dict(name=name,
+                        us_per_call=None if us is None else round(us, 3),
+                        derived=parse_derived(derived), **prov,
+                        obs=obs_cols[i] if i < len(obs_cols) else None)
+                   for i, (name, us, derived) in enumerate(rows)]
         with open(json_path, "w") as f:
             json.dump(payload, f, indent=2)
             f.write("\n")
@@ -128,12 +172,17 @@ def main():
         from . import bench_models
         sections.append(bench_models.run)
     for section in sections:
+        before = obs.snapshot()
+        n0 = len(rows)
         section(rows)
+        sl = _obs_slice(before, obs.snapshot())
+        obs_cols.extend([sl] * (len(rows) - n0))
         flush()
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:
-        print(f"{name},{us:.3f},{derived}")
+        us_col = "" if us is None else f"{us:.3f}"
+        print(f"{name},{us_col},{derived}")
     if json_path:
         print(f"wrote {len(rows)} rows to {json_path}")
 

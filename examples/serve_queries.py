@@ -10,16 +10,28 @@ responses back per request, **bit-identical** to what a direct
 per-request engine call returns (this script asserts it for every
 response, job counters included).
 
+With ``--telemetry DIR`` the demo also exercises the telemetry plane
+(DESIGN.md §11): it enables ``repro.obs``, warms every (method, params,
+ladder-size) program the run can touch, serves one warmup pass, then
+serves the measured pass inside an ``obs.CompileTracker`` and **asserts
+zero steady-state compiles** — the serving ladder's whole point — before
+writing ``DIR/obs_snapshot.json`` (metrics) and ``DIR/trace.json``
+(Chrome-trace spans, one admit → coalesce → execute → split chain per
+request; open in Perfetto).  CI runs this mode on every device matrix
+entry and uploads both files as artifacts.
+
 Run:  PYTHONPATH=src python examples/serve_queries.py [--users 12]
-          [--requests 4] [--max-wait-ms 5]
+          [--requests 4] [--max-wait-ms 5] [--telemetry DIR]
 """
 import argparse
 import asyncio
+import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.api import PointCloudScene, QueryEngine, Scene, make_ray
 from repro.serving import QueryServer
 
@@ -62,6 +74,24 @@ def make_jobs(rng, n_users, n_requests):
     return jobs
 
 
+def warm_ladder(engine, jobs, max_rows=128):
+    """Compile every (method, static-params, ladder-size) program the
+    serving run can touch — power-of-two sizes up to twice the batch cap,
+    one pass per distinct request configuration (``ray_type`` buckets
+    compile distinct programs).  After this, a served pass re-enters only
+    cached programs: the steady state ``--telemetry`` asserts."""
+    combos = {}
+    for _, kind, payload, kw in jobs:
+        combos.setdefault((kind, tuple(sorted(kw.items()))),
+                          (kind, payload, kw))
+    sizes = [1 << i for i in range(max_rows.bit_length())]
+    for kind, payload, kw in combos.values():
+        for n in sizes:
+            reps = jax.tree_util.tree_map(
+                lambda x: jnp.concatenate([x[:1]] * n, axis=0), payload)
+            jax.block_until_ready(getattr(engine, kind)(reps, **kw))
+
+
 async def user_session(server, my_jobs):
     """One client: fire requests concurrently, await the responses."""
     tasks = [asyncio.ensure_future(
@@ -89,13 +119,8 @@ def check_parity(engine, jobs, responses):
                                           np.asarray(ref.scores))
 
 
-async def main_async(args):
-    rng = np.random.default_rng(0)
-    engine = build_engine(rng)
-    jobs = make_jobs(rng, args.users, args.requests)
-    print(f"devices={jax.local_device_count()}  "
-          f"users={args.users}  requests={len(jobs)}")
-
+async def serve_pass(engine, jobs, args):
+    """One full client/server pass over ``jobs``."""
     async with QueryServer(engine, max_batch_rows=64,
                            max_wait=args.max_wait_ms * 1e-3) as server:
         per_user = [[j for j in jobs if j[0] == u]
@@ -103,6 +128,35 @@ async def main_async(args):
         results = await asyncio.gather(
             *[user_session(server, mine) for mine in per_user])
         stats = server.stats()
+    return per_user, results, stats
+
+
+async def main_async(args):
+    rng = np.random.default_rng(0)
+    if args.telemetry:
+        obs.enable()
+    engine = build_engine(rng)
+    jobs = make_jobs(rng, args.users, args.requests)
+    print(f"devices={jax.local_device_count()}  "
+          f"users={args.users}  requests={len(jobs)}")
+
+    tracker = None
+    if args.telemetry:
+        # ladder warm + one throwaway served pass: everything the
+        # measured pass executes (compiled programs AND eager pad/slice
+        # shapes) has been traced once, so the tracker below must read 0
+        warm_ladder(engine, jobs)
+        await serve_pass(engine, jobs, args)
+        tracker = obs.CompileTracker().start()
+
+    per_user, results, stats = await serve_pass(engine, jobs, args)
+
+    if tracker is not None:
+        tracker.stop()
+        print(f"steady-state compiles in measured pass: {tracker.compiles}")
+        assert tracker.compiles == 0, (
+            f"{tracker.compiles} jit tracings in the steady-state serving "
+            "pass — the quantized ladder should have absorbed them all")
 
     flat = [r for user in per_user for r in user]
     responses = [r for user_res in results for r in user_res]
@@ -124,6 +178,15 @@ async def main_async(args):
     print(f"overall requests/batch: {occupancy:.2f}")
     assert occupancy > 1.0, "coalescing never batched requests together"
 
+    if args.telemetry:
+        os.makedirs(args.telemetry, exist_ok=True)
+        snap_path = os.path.join(args.telemetry, "obs_snapshot.json")
+        trace_path = os.path.join(args.telemetry, "trace.json")
+        obs.write_snapshot(snap_path)
+        n_events = obs.export_chrome_trace(trace_path)
+        print(f"telemetry: wrote {snap_path} and {trace_path} "
+              f"({n_events} trace events)")
+
 
 def main():
     ap = argparse.ArgumentParser()
@@ -131,6 +194,10 @@ def main():
     ap.add_argument("--requests", type=int, default=4,
                     help="requests per user")
     ap.add_argument("--max-wait-ms", type=float, default=5.0)
+    ap.add_argument("--telemetry", metavar="DIR", default=None,
+                    help="enable repro.obs, assert steady-state compiles "
+                         "== 0, write obs_snapshot.json + trace.json "
+                         "(Chrome trace) into DIR")
     args = ap.parse_args()
     asyncio.run(main_async(args))
 

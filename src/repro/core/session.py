@@ -46,11 +46,14 @@ the engine remains swappable.
 from __future__ import annotations
 
 import math
+import time
 from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from ..obs.metrics import default_registry as _obs_registry
+from ..obs.trace import annotate as _obs_annotate
 from .build import build as build_structure
 from .build import refit as refit_bvh
 from .build import tree_stats
@@ -109,6 +112,22 @@ __all__ = [
     "trace_backend_ray_types",
     "trace_backends",
 ]
+
+
+# ---------------------------------------------------------------------------
+# Telemetry (DESIGN.md §11): instruments are resolved once at import so the
+# recording sites are pre-bound; with the registry disabled (the default)
+# every site below is one attribute check + branch and records nothing —
+# results are bit-identical either way (tests/test_obs.py pins this).
+# ---------------------------------------------------------------------------
+
+_OBS = _obs_registry()
+_OBS_CACHE_HITS = _OBS.counter("engine.cache.hits")
+_OBS_CACHE_MISSES = _OBS.counter("engine.cache.misses")
+_OBS_ROWS_REAL = _OBS.counter("engine.rows.real")
+_OBS_ROWS_PADDED = _OBS.counter("engine.rows.padded")
+_OBS_CHUNKS = _OBS.counter("engine.chunks")
+_OBS_SHARDS = _OBS.gauge("engine.shards")
 
 
 # ---------------------------------------------------------------------------
@@ -803,11 +822,35 @@ class QueryEngine:
         fn = self._cache.get(key)
         if fn is None:
             self._misses += 1
+            _OBS_CACHE_MISSES.inc()
             fn = jax.jit(build())
             self._cache[key] = fn
         else:
             self._hits += 1
+            _OBS_CACHE_HITS.inc()
         return fn
+
+    def _obs_record(self, method: str, backend: str, plan: ExecPlan,
+                    t0: float, result, jobs=()) -> None:
+        """Record one executed query into the default registry (callers
+        gate on ``_OBS.enabled``): wall time to a per-method histogram —
+        after blocking on the result, so the clock covers device work —
+        real vs padded rows (the pad-waste numerator/denominator in
+        ``obs.snapshot()``), chunk/shard fan-out, a per-(method, backend)
+        call counter, and whatever datapath job totals the backend
+        reports (quadbox/triangle for traces, box/point for neighbor
+        queries)."""
+        jax.block_until_ready(result)
+        dt_ms = (time.perf_counter() - t0) * 1e3
+        _OBS.histogram(f"engine.call_ms.{method}").observe(dt_ms)
+        _OBS.counter(f"engine.calls.{method}.{backend}").inc()
+        _OBS_ROWS_REAL.inc(plan.n)
+        _OBS_ROWS_PADDED.inc(plan.block * plan.n_blocks)
+        _OBS_CHUNKS.inc(plan.n_blocks)
+        _OBS_SHARDS.set(plan.shards)
+        for job_name, per_row in jobs:
+            _OBS.counter(f"engine.jobs.{job_name}.{backend}").inc(
+                int(jnp.sum(per_row)))
 
     # -- backend resolution ----------------------------------------------
 
@@ -1142,15 +1185,22 @@ class QueryEngine:
 
         fn = self._compiled(key, build_fn)
         ctx = self._trace_ctx(name, prepare, plan)
-        outs = [fn(ctx, block) for block in split_blocks(rays, plan)]
-        # streamed assembly: per-ray rows concatenate across chunks; the
-        # batch-level round count is the max over chunks and shards, which
-        # equals the single-device value (a ray is active for exactly
-        # quadbox_jobs consecutive rounds wherever it executes)
-        rounds = jnp.max(jnp.stack(
-            [jnp.max(jnp.atleast_1d(o.rounds)) for o in outs]))
-        rows = concat_rows([o._replace(rounds=None) for o in outs], n)
-        return rows._replace(rounds=rounds)
+        t0 = time.perf_counter() if _OBS.enabled else 0.0
+        with _obs_annotate("engine.trace"):
+            outs = [fn(ctx, block) for block in split_blocks(rays, plan)]
+            # streamed assembly: per-ray rows concatenate across chunks; the
+            # batch-level round count is the max over chunks and shards, which
+            # equals the single-device value (a ray is active for exactly
+            # quadbox_jobs consecutive rounds wherever it executes)
+            rounds = jnp.max(jnp.stack(
+                [jnp.max(jnp.atleast_1d(o.rounds)) for o in outs]))
+            rows = concat_rows([o._replace(rounds=None) for o in outs], n)
+            res = rows._replace(rounds=rounds)
+        if _OBS.enabled:
+            self._obs_record("trace", name, plan, t0, res,
+                             jobs=(("quadbox", res.quadbox_jobs),
+                                   ("triangle", res.triangle_jobs)))
+        return res
 
     def occluded(self, rays, *, t_min: float = SHADOW_T_MIN,
                  backend: str | None = None, shard=None,
@@ -1195,8 +1245,13 @@ class QueryEngine:
             return shard_rows(run, plan.mesh)
 
         fn = self._compiled(key, build)
-        return concat_rows([fn(block) for block in split_blocks(q, plan)],
-                           n)
+        t0 = time.perf_counter() if _OBS.enabled else 0.0
+        with _obs_annotate("engine.distance"):
+            res = concat_rows(
+                [fn(block) for block in split_blocks(q, plan)], n)
+        if _OBS.enabled:
+            self._obs_record(kind, name, plan, t0, res)
+        return res
 
     def _tree_neighbor(self, kind: str, queries, k: int, radius,
                        name: str, shard=None,
@@ -1246,11 +1301,17 @@ class QueryEngine:
 
         fn = self._compiled(key, build_fn)
         ctx = self._neighbor_ctx(name, prepare, plan)
-        outs = [fn(ctx, block) for block in split_blocks(rays, plan)]
-        rounds = jnp.max(jnp.stack(
-            [jnp.max(jnp.atleast_1d(o.rounds)) for o in outs]))
-        rec = concat_rows([o._replace(rounds=None) for o in outs], n)
-        rec = rec._replace(rounds=rounds)
+        t0 = time.perf_counter() if _OBS.enabled else 0.0
+        with _obs_annotate("engine.neighbor"):
+            outs = [fn(ctx, block) for block in split_blocks(rays, plan)]
+            rounds = jnp.max(jnp.stack(
+                [jnp.max(jnp.atleast_1d(o.rounds)) for o in outs]))
+            rec = concat_rows([o._replace(rounds=None) for o in outs], n)
+            rec = rec._replace(rounds=rounds)
+        if _OBS.enabled:
+            self._obs_record(kind, name, plan, t0, rec,
+                             jobs=(("box", rec.box_jobs),
+                                   ("point", rec.point_jobs)))
         if kk < k:  # pad the clamped top-k axis back out (k > N)
             pad = k - kk
             rec = rec._replace(

@@ -1,0 +1,124 @@
+"""Compile-event tracking: count jit retraces as a first-class metric.
+
+The repo's zero-retrace contracts (``Scene.refit`` animation frames,
+chunked dispatch re-entering one compiled function, the serving ladder's
+O(log) program count) were guarded by a test-only closure-counter trick:
+``jax._src.test_util.count_jit_tracing_cache_miss`` monkey-patched
+around each assertion.  This module promotes that trick into a public,
+always-available :class:`CompileTracker` (DESIGN.md §11) so the same
+signal that gates the tests can be *served* — exported in
+``obs.snapshot()``, attached to benchmark rows, and asserted by CI
+against a live serving run.
+
+Mechanism: one process-wide hook around ``jax``'s pjit jaxpr-creation
+step — the function that runs exactly once per (fun, abstract-args)
+tracing-cache miss, i.e. per retrace.  The hook is installed lazily on
+first use and then **never removed**: the wrapper is ``lu.cache``-d like
+the original, so uninstalling/reinstalling would cold-start that cache
+and miscount warm functions as fresh compiles.  Until something installs
+it, tracked totals read 0 and the interpreter runs byte-for-byte stock
+jax (telemetry disabled really is disabled).
+
+:class:`CompileTracker` is a window over the monotonic process total::
+
+    with CompileTracker() as t:
+        engine.trace(rays)        # steady state: everything cached
+    assert t.compiles == 0
+
+Nested and overlapping trackers are fine — each just subtracts its own
+baseline.  When the global registry is enabled, every retrace also
+increments the ``jit.retraces`` counter there.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from .metrics import default_registry
+
+__all__ = ["CompileTracker", "hook_installed", "install_hook",
+           "total_compiles"]
+
+#: monotonic process-wide retrace count (valid once the hook is in)
+_COUNT = [0]
+_INSTALLED = False
+
+#: pre-created so the hook's registry path is one attribute check
+_RETRACES = default_registry().counter("jit.retraces")
+
+
+def install_hook() -> bool:
+    """Install the retrace-counting hook (idempotent).  Returns whether
+    the hook is active — False only when this jax version lacks the
+    internals, in which case tracked counts stay 0 and every consumer
+    degrades gracefully."""
+    global _INSTALLED
+    if _INSTALLED:
+        return True
+    try:  # jax-internal surface: feature-detect, never hard-require
+        from jax._src import linear_util as lu
+        from jax._src import pjit as pjit_lib
+        original = pjit_lib._create_pjit_jaxpr
+    except (ImportError, AttributeError):
+        return False
+
+    @lu.cache
+    def create_pjit_jaxpr_and_count(*args):
+        _COUNT[0] += 1
+        _RETRACES.inc()
+        return original(*args)
+
+    pjit_lib._create_pjit_jaxpr = create_pjit_jaxpr_and_count
+    _INSTALLED = True
+    return True
+
+
+def hook_installed() -> bool:
+    return _INSTALLED
+
+
+def total_compiles() -> int:
+    """Process-wide retraces since the hook went in (0 before)."""
+    return _COUNT[0]
+
+
+class CompileTracker:
+    """A window over the process retrace counter.
+
+    Use as a context manager (the test idiom the suite runs on) or via
+    explicit :meth:`start` / :meth:`stop`; :attr:`compiles` is the number
+    of jit tracings that happened inside the window.  Constructing a
+    tracker installs the hook if it is not in yet.
+    """
+
+    def __init__(self):
+        self.available = install_hook()
+        self._start: Optional[int] = None
+        self._stop: Optional[int] = None
+
+    def start(self) -> "CompileTracker":
+        self._start = _COUNT[0]
+        self._stop = None
+        return self
+
+    def stop(self) -> int:
+        self._stop = _COUNT[0]
+        return self.compiles
+
+    @property
+    def compiles(self) -> int:
+        """Retraces since :meth:`start` (live while the window is open,
+        frozen once stopped; 0 before the window opens)."""
+        if self._start is None:
+            return 0
+        end = _COUNT[0] if self._stop is None else self._stop
+        return end - self._start
+
+    def __enter__(self) -> "CompileTracker":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    def __repr__(self):
+        return (f"CompileTracker(compiles={self.compiles}, "
+                f"available={self.available})")

@@ -36,7 +36,6 @@ from __future__ import annotations
 import asyncio
 import math
 import time
-from collections import deque
 from typing import NamedTuple, Optional
 
 import jax
@@ -47,6 +46,9 @@ from ..core.dispatch import slice_rows
 from ..core.knn import METRICS, RADIUS_METRICS, check_k, check_radius
 from ..core.session import QueryEngine
 from ..core.wavefront import RAY_TYPES, SHADOW_T_MIN
+from ..obs import register_source
+from ..obs.metrics import MetricsRegistry
+from ..obs.trace import default_buffer
 from .admission import (
     ADMIT,
     REJECT,
@@ -67,10 +69,6 @@ from .batching import (
 )
 
 __all__ = ["QueryServer", "ServerStats"]
-
-#: latencies kept per method for the p50/p99 estimate (a bounded window,
-#: so a long-lived server never grows without bound)
-LATENCY_WINDOW = 100_000
 
 
 class ServerStats(NamedTuple):
@@ -93,26 +91,29 @@ class ServerStats(NamedTuple):
 
 
 class _MethodStats:
+    """Pre-resolved per-method instruments on the server's private
+    registry (``serving.{method}.*`` names).  The registry is
+    *always-enabled* — ``stats()`` predates the telemetry plane and must
+    keep counting with global telemetry off — and single-writer per
+    instrument (the event loop / the one worker), so the counts stay
+    exact.  ``repro.obs.snapshot()`` picks the same numbers up through
+    the server's registered snapshot source."""
+
     __slots__ = ("requests", "rows", "batches", "batch_rows", "padded_rows",
-                 "flushes", "shed", "latencies")
+                 "flushes", "shed", "latency_ms")
 
-    def __init__(self):
-        self.requests = 0
-        self.rows = 0
-        self.batches = 0
-        self.batch_rows = 0
-        self.padded_rows = 0
-        self.flushes = {FLUSH_FULL: 0, FLUSH_TIMER: 0, FLUSH_DEADLINE: 0,
-                        FLUSH_DRAIN: 0}
-        self.shed = 0
-        self.latencies = deque(maxlen=LATENCY_WINDOW)
-
-
-def _pct(latencies, q: float) -> float:
-    if not latencies:
-        return float("nan")
-    s = sorted(latencies)
-    return s[min(len(s) - 1, max(0, math.ceil(q * len(s)) - 1))] * 1e3
+    def __init__(self, reg: MetricsRegistry, method: str):
+        pre = f"serving.{method}."
+        self.requests = reg.counter(pre + "requests")
+        self.rows = reg.counter(pre + "rows")
+        self.batches = reg.counter(pre + "batches")
+        self.batch_rows = reg.counter(pre + "batch_rows")
+        self.padded_rows = reg.counter(pre + "padded_rows")
+        self.flushes = {reason: reg.counter(pre + "flush." + reason)
+                        for reason in (FLUSH_FULL, FLUSH_TIMER,
+                                       FLUSH_DEADLINE, FLUSH_DRAIN)}
+        self.shed = reg.counter(pre + "shed")
+        self.latency_ms = reg.histogram(pre + "latency_ms")
 
 
 def _n_rows(payload) -> int:
@@ -185,6 +186,13 @@ class QueryServer:
         self.quantize_batches = bool(quantize_batches)
         self._clock = clock
         self._stats: dict = {}
+        # exact request accounting on a private always-enabled registry
+        # (DESIGN.md §11); the global snapshot sees it as a weakly-held
+        # named source, and request-lifecycle spans go to the global
+        # trace buffer (which only records when telemetry is enabled)
+        self._obs = MetricsRegistry(enabled=True, name="serving")
+        self._trace = default_buffer()
+        self._source_name = register_source("serving", self._obs_source)
         self._ready: Optional[asyncio.Queue] = None
         self._wake: Optional[asyncio.Event] = None
         self._capacity: Optional[asyncio.Condition] = None
@@ -343,11 +351,16 @@ class QueryServer:
             # coalesce, nothing compiled, bit-identical trivially
             fut.set_result(self._call_engine(method, payload, dict(params)))
             return fut
+        t_admit = self._clock()
         await self._admit()
         now = self._clock()
         deadline = None if timeout is None else now + float(timeout)
         req = make_request(method, params, payload, n_rows, now,
                            deadline=deadline, future=fut)
+        if self._trace.enabled:
+            self._trace.record("admit", t_admit, now - t_admit,
+                               tid=req.id, cat="serving",
+                               args={"method": method, "rows": n_rows})
         full = self.coalescer.add(req)
         if full is not None:
             self._push(full)
@@ -371,7 +384,7 @@ class QueryServer:
                         f"admission queue at limit {self.admission.limit} "
                         "and nothing left to shed (all in flight)")
                 self.admission.admit_after_shed()
-                self._mstats(victim.method).shed += 1
+                self._mstats(victim.method).shed.inc()
                 if not victim.future.done():
                     victim.future.set_exception(RequestShed(
                         "request shed to admit newer work "
@@ -391,7 +404,7 @@ class QueryServer:
 
     def _push(self, batch: Batch) -> None:
         ms = self._mstats(batch.method)
-        ms.flushes[batch.reason] += 1
+        ms.flushes[batch.reason].inc()
         self._ready.put_nowait(batch)
 
     async def _timer_loop(self) -> None:
@@ -417,9 +430,9 @@ class QueryServer:
                 now = self._clock()
                 ms = self._mstats(batch.method)
                 for req, res in zip(batch.requests, results):
-                    ms.requests += 1
-                    ms.rows += req.n_rows
-                    ms.latencies.append(now - req.enqueued)
+                    ms.requests.inc()
+                    ms.rows.inc(req.n_rows)
+                    ms.latency_ms.observe((now - req.enqueued) * 1e3)
                     if not req.future.done():
                         req.future.set_result(res)
             except Exception as exc:  # fail the batch, keep serving
@@ -452,15 +465,35 @@ class QueryServer:
         back per request.  Bit-parity with per-request execution is the
         contract; see the module docstring for why it holds."""
         target = self._target_rows(batch)
+        t_exec = self._clock()
         payload = _assemble_payload(batch.requests, target)
         result = self._call_engine(batch.method, payload,
                                    dict(batch.params))
         jax.block_until_ready(result)
         ms = self._mstats(batch.method)
-        ms.batches += 1
-        ms.batch_rows += batch.rows
-        ms.padded_rows += max(target, batch.rows)
-        return self._split(batch.method, result, batch.sizes)
+        ms.batches.inc()
+        ms.batch_rows.inc(batch.rows)
+        ms.padded_rows.inc(max(target, batch.rows))
+        t_split = self._clock()
+        parts = self._split(batch.method, result, batch.sizes)
+        if self._trace.enabled:
+            # one span chain per request (tid = request id): how long it
+            # coalesced, the shared engine execution, the host-side split
+            t_done = self._clock()
+            for req in batch.requests:
+                self._trace.record(
+                    "coalesce", req.enqueued, t_exec - req.enqueued,
+                    tid=req.id, cat="serving",
+                    args={"reason": batch.reason,
+                          "batch_requests": len(batch.requests)})
+                self._trace.record(
+                    "execute", t_exec, t_split - t_exec,
+                    tid=req.id, cat="serving",
+                    args={"method": batch.method, "batch_rows": batch.rows,
+                          "target_rows": target})
+                self._trace.record("split", t_split, t_done - t_split,
+                                   tid=req.id, cat="serving")
+        return parts
 
     def _call_engine(self, method: str, payload, p: dict):
         e = self.engine
@@ -510,33 +543,50 @@ class QueryServer:
     def _mstats(self, method: str) -> _MethodStats:
         ms = self._stats.get(method)
         if ms is None:
-            ms = self._stats[method] = _MethodStats()
+            ms = self._stats[method] = _MethodStats(self._obs, method)
         return ms
 
     def stats(self) -> dict:
-        """Per-method :class:`ServerStats` for every method seen."""
+        """Per-method :class:`ServerStats` for every method seen — a view
+        over the server's metrics registry (the instrument values *are*
+        the counts; this dict shape predates the telemetry plane and is
+        pinned by ``tests/test_obs.py``)."""
         out = {}
         for method, ms in self._stats.items():
+            requests, batches = ms.requests.value, ms.batches.value
+            batch_rows, padded = ms.batch_rows.value, ms.padded_rows.value
             out[method] = ServerStats(
-                requests=ms.requests, rows=ms.rows, batches=ms.batches,
+                requests=requests, rows=ms.rows.value, batches=batches,
                 queue_depth=self.coalescer.depth_for(method),
-                requests_per_batch=(ms.requests / ms.batches
-                                    if ms.batches else 0.0),
-                mean_batch_rows=(ms.batch_rows / ms.batches
-                                 if ms.batches else 0.0),
-                mean_fill=(ms.batch_rows / ms.padded_rows
-                           if ms.padded_rows else 0.0),
-                flush_full=ms.flushes[FLUSH_FULL],
-                flush_timer=ms.flushes[FLUSH_TIMER],
-                flush_deadline=ms.flushes[FLUSH_DEADLINE],
-                flush_drain=ms.flushes[FLUSH_DRAIN],
-                shed=ms.shed,
-                p50_ms=_pct(ms.latencies, 0.50),
-                p99_ms=_pct(ms.latencies, 0.99))
+                requests_per_batch=(requests / batches
+                                    if batches else 0.0),
+                mean_batch_rows=(batch_rows / batches
+                                 if batches else 0.0),
+                mean_fill=(batch_rows / padded if padded else 0.0),
+                flush_full=ms.flushes[FLUSH_FULL].value,
+                flush_timer=ms.flushes[FLUSH_TIMER].value,
+                flush_deadline=ms.flushes[FLUSH_DEADLINE].value,
+                flush_drain=ms.flushes[FLUSH_DRAIN].value,
+                shed=ms.shed.value,
+                p50_ms=ms.latency_ms.percentile(0.50),
+                p99_ms=ms.latency_ms.percentile(0.99))
         return out
 
     def admission_stats(self) -> AdmissionStats:
         return self.admission.stats()
+
+    def _obs_source(self) -> dict:
+        """This server's section of ``repro.obs.snapshot()`` (JSON-able:
+        the non-finite percentile placeholders become None)."""
+
+        def clean(v):
+            return None if (isinstance(v, float)
+                            and not math.isfinite(v)) else v
+
+        out = {method: {k: clean(v) for k, v in s._asdict().items()}
+               for method, s in self.stats().items()}
+        out["admission"] = self.admission.stats()._asdict()
+        return out
 
     def __repr__(self):
         return (f"QueryServer(engine={self.engine!r}, "

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-import jax._src.test_util as jtu
+from repro.obs import CompileTracker
 
 from repro.api import Scene, builders, make_ray, refit
 from repro.core import (Triangle, build, sah_cost, trace_rays,
@@ -293,11 +293,11 @@ def test_animated_refit_zero_retrace_and_rebuild_parity(builder):
     scene.refit(frame(1))  # first refit: compiles the refit sweep
     engine.trace(rays)
     frames = []
-    with jtu.count_jit_tracing_cache_miss() as count:
+    with CompileTracker() as tracker:
         for k in range(2, 5):  # three more animation frames
             scene.refit(frame(k))
             frames.append((k, engine.trace(rays)))
-    assert count[0] == 0, "animated refit frames retraced"
+    assert tracker.compiles == 0, "animated refit frames retraced"
     assert engine.cache_info().misses == 1  # one compiled trace, reused
     for k, rec in frames:
         rebuilt = Scene.from_triangles(frame(k), builder=builder)

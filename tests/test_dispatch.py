@@ -204,9 +204,9 @@ def test_sharded_chunk_cache_reuse_8dev(multidev):
     repeat query retraces nothing."""
     multidev("""
 import numpy as np, jax, jax.numpy as jnp
-import jax._src.test_util as jtu
 from repro.api import Scene, make_ray
 from repro.core import Triangle
+from repro.obs import CompileTracker
 rng = np.random.default_rng(3)
 ctr = rng.uniform(-1, 1, (100, 3)).astype(np.float32)
 tri = Triangle(jnp.asarray(ctr),
@@ -219,9 +219,9 @@ rays = make_ray(jnp.asarray(org), jnp.asarray(tgt - org))
 engine = scene.engine(pad_multiple=8, shard=8, chunk_size=40)
 engine.trace(rays)
 assert engine.cache_info() == (0, 1, 1), engine.cache_info()
-with jtu.count_jit_tracing_cache_miss() as count:
+with CompileTracker() as tracker:
     engine.trace(rays)
-assert count[0] == 0, "sharded chunked re-query retraced"
+assert tracker.compiles == 0, "sharded chunked re-query retraced"
 assert engine.cache_info().hits == 1
 print("sharded chunk cache reuse OK")
 """, n_devices=8)

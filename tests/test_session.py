@@ -12,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-import jax._src.test_util as jtu
+from repro.obs import CompileTracker
 
 from repro.api import (QueryEngine, Scene, VectorIndex, distance_backends,
                        make_ray, trace_backends)
@@ -242,9 +242,9 @@ def test_same_shape_query_hits_compiled_cache():
     first = engine.trace(rays)
     assert engine.cache_info().misses == 1
     # second same-shape call: engine cache hit AND zero new jit traces
-    with jtu.count_jit_tracing_cache_miss() as count:
+    with CompileTracker() as tracker:
         second = engine.trace(rays)
-    assert count[0] == 0, "same-shape query retraced its compiled function"
+    assert tracker.compiles == 0, "same-shape query retraced its compiled function"
     info = engine.cache_info()
     assert info.hits == 1 and info.misses == 1 and info.entries == 1
     np.testing.assert_array_equal(np.asarray(first.t), np.asarray(second.t))
@@ -258,18 +258,18 @@ def test_same_shape_query_hits_compiled_cache():
     sub9 = jax.tree_util.tree_map(lambda x: x[:9], rays)
     engine.trace(sub9)  # pads to 16: same compiled fn as sub
     assert engine.cache_info().entries == 2
-    with jtu.count_jit_tracing_cache_miss() as count:
+    with CompileTracker() as tracker:
         engine.trace(sub9)
-    assert count[0] == 0
+    assert tracker.compiles == 0
 
 
 def test_distance_cache_and_stats():
     q, db = _vectors()
     engine = VectorIndex.from_database(db).engine(pad_multiple=8)
     engine.nearest(q, 5)
-    with jtu.count_jit_tracing_cache_miss() as count:
+    with CompileTracker() as tracker:
         engine.nearest(q, 5)
-    assert count[0] == 0
+    assert tracker.compiles == 0
     assert engine.cache_info().hits == 1
     engine.nearest(q, 7)  # different k -> different compiled fn
     assert engine.cache_info().entries == 2
@@ -419,9 +419,9 @@ def test_chunked_trace_is_bit_identical(ray_type):
     assert int(got.rounds) == int(ref.rounds)
     # 50 rays in 16-row blocks = 4 chunked calls, one compiled function
     assert chunked.cache_info() == (0, 1, 1)
-    with jtu.count_jit_tracing_cache_miss() as count:
+    with CompileTracker() as tracker:
         chunked.trace(rays, ray_type=ray_type, backend="wavefront")
-    assert count[0] == 0, "chunked re-query retraced its compiled function"
+    assert tracker.compiles == 0, "chunked re-query retraced its compiled function"
 
 
 def test_chunked_distance_is_bit_identical():
