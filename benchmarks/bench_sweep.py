@@ -1,0 +1,97 @@
+"""Datapath config sweep: the arity/stack/precision/codec grid, measured.
+
+The :class:`~repro.core.bvh.DatapathConfig` tentpole makes the paper's
+fixed datapath choices (BVH4, fp32 boxes, a 64-deep stack) *knobs*.  This
+section answers the question the knobs exist for: what does each twin
+actually cost and save?  For every config in the sweep grid it builds the
+clustered quality workload, traces a shared probe batch through the
+wavefront engine, and emits one row with
+
+* tree quality — ``sah_cost``, measured mean box-test / OpTriangle jobs
+  per ray (the conservative-codec job *overhead* is the superset margin
+  vs the same-arity exact twin, visible directly in the trajectory),
+* memory — ``bytes_per_node`` (what the fused kernel keeps resident) and
+  the node ``compression_ratio`` vs plain fp32,
+* shape — ``depth``, ``n_nodes``, measured ``mean_branching_factor``,
+* latency — steady-state wavefront trace microseconds per ray, and the
+  batch-level round count.
+
+Every row's ``derived`` string leads with ``config=<tag>``; the JSON
+writer promotes that key to a top-level column (null for rows from other
+sections), so the trajectory can group/filter by twin without parsing
+names.  Closest-hit results are bit-identical across the whole grid (the
+test matrix pins it); the sweep exists to price the *scheduling*
+differences that remain.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import Scene, make_ray
+from repro.core.build import clustered_soup
+from repro.core.bvh import DatapathConfig
+
+#: the sweep grid: arity x node codec (+ one tight-stack probe per arity).
+#: fp32/fp32 twins are the exact baselines their codec twins are measured
+#: against; the s16 twins price a small on-chip stack (RayCore-style).
+SWEEP_CONFIGS = (
+    DatapathConfig(),
+    DatapathConfig(precision="bf16"),
+    DatapathConfig(precision="bf16", node_format="compressed"),
+    DatapathConfig(arity=8),
+    DatapathConfig(arity=8, precision="bf16"),
+    DatapathConfig(arity=8, precision="bf16", node_format="compressed"),
+    DatapathConfig(stack_size=16),
+    DatapathConfig(arity=8, stack_size=16),
+)
+
+
+def _timed(fn, *args):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    out = fn(*args)
+    jax.block_until_ready(out)
+    return out, time.perf_counter() - t0
+
+
+def run(rows, builder: str = "sah"):
+    rng = np.random.default_rng(0)
+    tri = clustered_soup(rng, n_clusters=12, per_cluster=250)
+    n_tri = int(tri.a.shape[0])
+
+    n_rays = 512
+    org = rng.uniform(-7, -6, (n_rays, 3)).astype(np.float32)
+    tgt = rng.uniform(-4, 4, (n_rays, 3)).astype(np.float32)
+    rays = make_ray(jnp.asarray(org), jnp.asarray(tgt - org))
+
+    for config in SWEEP_CONFIGS:
+        scene = Scene.from_triangles(tri, builder=builder, config=config)
+        engine = scene.engine(shard=1)
+        rec, dt_trace = _timed(
+            lambda r, e=engine: e.trace(r, backend="wavefront"), rays)
+        st = scene.stats(rays=rays)
+        node_bytes = st.n_nodes * st.bytes_per_node
+        overflow = float(np.asarray(rec.stack_overflow).mean())
+        rows.append((
+            f"sweep_{config.tag}_{builder}_{n_tri // 1000}k_clustered",
+            dt_trace * 1e6,
+            f"config={config.tag};"
+            f"arity={st.arity};"
+            f"depth={st.depth};"
+            f"n_nodes={st.n_nodes};"
+            f"sah_cost={st.sah_cost:.2f};"
+            f"mean_quadbox_jobs={st.mean_quadbox_jobs:.2f};"
+            f"mean_tri_jobs={st.mean_triangle_jobs:.2f};"
+            f"mean_jobs={st.mean_jobs:.2f};"
+            f"mean_branching_factor={st.mean_branching_factor:.2f};"
+            f"bytes_per_node={st.bytes_per_node};"
+            f"node_bytes_total={node_bytes};"
+            f"compression_ratio={st.compression_ratio:.1f}x;"
+            f"overflow_fraction={overflow:.4f};"
+            f"trace_us_per_ray={dt_trace / n_rays * 1e6:.3f};"
+            f"batched_rounds={int(rec.rounds)}"))

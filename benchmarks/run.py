@@ -22,6 +22,12 @@ it as an artifact on every run).
 * ``derived`` — ``k=v;k=v`` string, parsed into a dict for JSON by
   :func:`parse_derived`.
 
+Rows from the datapath config sweep (``bench_sweep``) lead their derived
+string with ``config=<tag>``; the JSON writer *promotes* that key to a
+top-level ``config`` column (null for every other section's rows), so the
+trajectory can group by datapath twin without parsing row names — the
+``BENCH_quick.json`` schema guard in CI pins the column's presence.
+
 Every JSON row additionally carries the provenance columns the
 trajectory needs to be comparable across machines and commits:
 ``device`` (platform kind + count), ``jax_version``, and ``git_rev`` —
@@ -138,7 +144,7 @@ def main():
     from repro import obs
 
     from . import (bench_build, bench_datapath, bench_knn, bench_serving,
-                   bench_traversal)
+                   bench_sweep, bench_traversal)
 
     obs.enable()  # every row gets its section's telemetry slice
 
@@ -153,18 +159,24 @@ def main():
         # an empty artifact)
         if not json_path:
             return
-        payload = [dict(name=name,
-                        us_per_call=None if us is None else round(us, 3),
-                        derived=parse_derived(derived), **prov,
-                        obs=obs_cols[i] if i < len(obs_cols) else None)
-                   for i, (name, us, derived) in enumerate(rows)]
+        payload = []
+        for i, (name, us, derived) in enumerate(rows):
+            metrics = parse_derived(derived)
+            # the config sweep's datapath-twin tag is a first-class
+            # trajectory column, not a buried metric (null elsewhere)
+            config = metrics.pop("config", None)
+            payload.append(dict(
+                name=name,
+                us_per_call=None if us is None else round(us, 3),
+                config=config, derived=metrics, **prov,
+                obs=obs_cols[i] if i < len(obs_cols) else None))
         with open(json_path, "w") as f:
             json.dump(payload, f, indent=2)
             f.write("\n")
 
     flush()  # schema-stable empty file exists from the first moment
     sections = [bench_datapath.run, bench_traversal.run, bench_build.run,
-                bench_knn.run,
+                bench_sweep.run, bench_knn.run,
                 lambda rows: bench_serving.run(rows, n_requests=120,
                                                qps=1000.0)
                 if args.quick else bench_serving.run(rows)]

@@ -26,10 +26,18 @@ from __future__ import annotations
 
 from typing import Callable, NamedTuple
 
-from ..bvh import BVH4, bvh4_depth
+from ..bvh import (
+    BVH4,
+    DEFAULT_CONFIG,
+    DatapathConfig,
+    bvh_depth,
+    bvh4_depth,
+    resolve_config,
+)
 from ..types import Triangle
 
-# name -> builder(tri: Triangle, depth: int) -> BVH4 (jittable, static depth)
+# name -> builder(tri: Triangle, depth: int, config: DatapathConfig) -> BVH4
+# (jittable; depth and config are static)
 _BUILDERS: dict[str, Callable] = {}
 
 
@@ -38,13 +46,16 @@ class BuildResult(NamedTuple):
 
     bvh: BVH4
     builder: str  # registry name that produced the tree
-    depth: int  # static tree depth (4**depth leaf slots)
+    depth: int  # static tree depth (arity**depth leaf slots)
+    config: DatapathConfig = DEFAULT_CONFIG  # datapath knobs the tree targets
 
 
 def register_builder(name: str):
     """Register an acceleration-structure builder under ``name``.  The
-    builder receives ``(triangles, depth)`` with a static depth and must
-    return a :class:`BVH4` in the shared implicit layout."""
+    builder receives ``(triangles, depth, config)`` with static depth and
+    :class:`~repro.core.bvh.DatapathConfig`, and must return a
+    :class:`BVH4` in the shared implicit layout at ``config.arity`` with
+    the config's node-box codec applied."""
     def deco(fn):
         _BUILDERS[name] = fn
         return fn
@@ -63,20 +74,26 @@ def get_builder(name: str) -> Callable:
 
 
 def build(triangles: Triangle, builder: str = "lbvh",
-          depth: int | None = None) -> BuildResult:
+          depth: int | None = None,
+          config: DatapathConfig | None = None) -> BuildResult:
     """Build an acceleration structure with a registered builder.
 
     ``depth`` must be static; it defaults to the smallest depth whose
-    ``4**depth`` leaf slots fit the soup.
+    ``config.arity**depth`` leaf slots fit the soup.  ``config`` selects
+    the datapath twin the tree is built for (arity + node-box codec);
+    ``None`` is the seed-equivalent BVH4/fp32 default.
     """
     fn = get_builder(builder)
+    config = resolve_config(config)
     n = triangles.a.shape[0]
     if depth is None:
-        depth = bvh4_depth(n)
-    if 4**depth < n:
+        depth = bvh_depth(n, config.arity)
+    if config.arity**depth < n:
         raise ValueError(
-            f"depth={depth} gives {4**depth} leaf slots < {n} triangles")
-    return BuildResult(bvh=fn(triangles, depth), builder=builder, depth=depth)
+            f"depth={depth} gives {config.arity**depth} leaf slots"
+            f" < {n} triangles")
+    return BuildResult(bvh=fn(triangles, depth, config), builder=builder,
+                       depth=depth, config=config)
 
 
 # builder modules self-register on import (like the session backends)
@@ -85,6 +102,7 @@ from .lbvh import build_bvh4  # noqa: E402,F401  (legacy name, re-exported)
 from .quality import (  # noqa: E402,F401
     TreeStats,
     clustered_soup,
+    mean_branching_factor,
     mean_jobs_per_ray,
     probe_rays,
     sah_cost,
@@ -106,6 +124,7 @@ __all__ = [
     "builders",
     "clustered_soup",
     "get_builder",
+    "mean_branching_factor",
     "mean_jobs_per_ray",
     "point_boxes",
     "probe_rays",

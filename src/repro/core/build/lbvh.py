@@ -19,7 +19,16 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from ..bvh import BVH4, bvh4_depth, fit_nodes, leaf_arrays, nondegenerate_mask
+from ..bvh import (
+    BVH4,
+    DatapathConfig,
+    bvh_depth,
+    encode_nodes,
+    fit_nodes,
+    leaf_arrays,
+    nondegenerate_mask,
+    resolve_config,
+)
 from ..types import Box, Triangle, aabb_of_triangles
 from . import register_builder
 
@@ -43,17 +52,17 @@ def morton3d(points01: jax.Array) -> jax.Array:
     return (x << 2) | (y << 1) | z
 
 
-def lbvh_leaf_perm(boxes: Box, depth: int) -> jax.Array:
+def lbvh_leaf_perm(boxes: Box, depth: int, arity: int = 4) -> jax.Array:
     """Morton-order leaf-slot assignment over per-primitive AABBs.
 
     The primitive-agnostic core of the LBVH builder: everything up to the
     leaf-array scatter needs only each primitive's bounding box, so
     triangle soups and point clouds (:mod:`repro.core.build.points`,
     whose "boxes" are the points themselves) share it.  Returns the
-    ``(4**depth,)`` slot permutation (-1 = empty pad slot).
+    ``(arity**depth,)`` slot permutation (-1 = empty pad slot).
     """
     n = boxes.lo.shape[0]
-    n_leaves = 4**depth
+    n_leaves = arity**depth
     centroid = 0.5 * (boxes.lo + boxes.hi)
     scene_lo = jnp.min(boxes.lo, axis=0)
     scene_hi = jnp.max(boxes.hi, axis=0)
@@ -66,18 +75,22 @@ def lbvh_leaf_perm(boxes: Box, depth: int) -> jax.Array:
 
 
 @register_builder("lbvh")
-def build_bvh4(tri: Triangle, depth: int | None = None) -> BVH4:
-    """Build a BVH4 over a triangle soup.  ``depth`` must be static if given."""
+def build_bvh4(tri: Triangle, depth: int | None = None,
+               config: DatapathConfig | None = None) -> BVH4:
+    """Build a wide BVH over a triangle soup.  ``depth`` must be static if
+    given; ``config`` picks the arity and node-box codec (default BVH4/fp32)."""
+    config = resolve_config(config)
     n = tri.a.shape[0]
     if depth is None:
-        depth = bvh4_depth(n)
+        depth = bvh_depth(n, config.arity)
 
     boxes = aabb_of_triangles(tri)
-    leaf_perm = lbvh_leaf_perm(boxes, depth)
+    leaf_perm = lbvh_leaf_perm(boxes, depth, config.arity)
     # degenerate cull: zero-area triangles become padded leaves (tri -1,
     # inverted box) so no engine can ever report them as hits
     leaf_tri, leaf_lo, leaf_hi = leaf_arrays(leaf_perm, boxes,
                                              nondegenerate_mask(tri))
-    node_lo, node_hi = fit_nodes(leaf_lo, leaf_hi, depth)
+    node_lo, node_hi = fit_nodes(leaf_lo, leaf_hi, depth, config.arity)
+    node_lo, node_hi = encode_nodes(node_lo, node_hi, depth, config)
     return BVH4(node_lo=node_lo, node_hi=node_hi, leaf_tri=leaf_tri,
                 triangles=tri, leaf_perm=leaf_perm)

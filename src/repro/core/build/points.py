@@ -26,7 +26,16 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from ..bvh import BVH4, bvh4_depth, depth_of, fit_nodes, leaf_arrays
+from ..bvh import (
+    BVH4,
+    DatapathConfig,
+    bvh4_depth,
+    depth_of,
+    encode_nodes,
+    fit_nodes,
+    leaf_arrays,
+    resolve_config,
+)
 from ..types import Box, Triangle
 from . import BuildResult
 from .lbvh import lbvh_leaf_perm
@@ -63,14 +72,30 @@ def _check_points(points: jax.Array, where: str) -> jax.Array:
     return points
 
 
+def _check_point_config(config, where: str) -> DatapathConfig:
+    """Point clouds accept the node-box codec knobs but stay 4-wide: the
+    neighbor engines traverse the paper's fixed quad-box datapath.  The
+    codecs are safe here — membership is decided by exact point distance
+    at the leaves, so conservatively widened boxes only add visited nodes,
+    never neighbors."""
+    config = resolve_config(config)
+    if config.arity != 4:
+        raise ValueError(
+            f"{where}: point-cloud trees are 4-wide (the neighbor engines "
+            f"traverse the quad-box datapath); got arity={config.arity}")
+    return config
+
+
 def build_point_bvh(points: jax.Array, builder: str = "lbvh",
-                    depth: int | None = None) -> BuildResult:
+                    depth: int | None = None,
+                    config: DatapathConfig | None = None) -> BuildResult:
     """Build a BVH4 over a point cloud with a registered builder core.
 
     ``depth`` must be static; it defaults to the smallest depth whose
     ``4**depth`` leaf slots fit the cloud.  Jittable per (size, depth).
     """
     points = _check_points(points, "build_point_bvh")
+    config = _check_point_config(config, "build_point_bvh")
     n = points.shape[0]
     if builder not in POINT_BUILDERS:
         raise ValueError(f"unknown point builder {builder!r} "
@@ -88,12 +113,14 @@ def build_point_bvh(points: jax.Array, builder: str = "lbvh",
     leaf_tri, leaf_lo, leaf_hi = leaf_arrays(leaf_perm, boxes,
                                              jnp.ones((n,), bool))
     node_lo, node_hi = fit_nodes(leaf_lo, leaf_hi, depth)
+    node_lo, node_hi = encode_nodes(node_lo, node_hi, depth, config)
     bvh = BVH4(node_lo=node_lo, node_hi=node_hi, leaf_tri=leaf_tri,
                triangles=_point_soup(points), leaf_perm=leaf_perm)
-    return BuildResult(bvh=bvh, builder=builder, depth=depth)
+    return BuildResult(bvh=bvh, builder=builder, depth=depth, config=config)
 
 
-def refit_points(bvh: BVH4, points: jax.Array) -> BVH4:
+def refit_points(bvh: BVH4, points: jax.Array,
+                 config: DatapathConfig | None = None) -> BVH4:
     """Topology-preserving refit for a moved cloud (same count, same order).
 
     The triangle :func:`~repro.core.build.refit.refit` re-evaluates the
@@ -103,6 +130,7 @@ def refit_points(bvh: BVH4, points: jax.Array) -> BVH4:
     pytree-compatible with its build.
     """
     points = _check_points(points, "refit_points")
+    config = _check_point_config(config, "refit_points")
     n_built = bvh.triangles.a.shape[0]
     if points.shape[0] != n_built:
         raise ValueError(
@@ -115,5 +143,6 @@ def refit_points(bvh: BVH4, points: jax.Array) -> BVH4:
     leaf_tri, leaf_lo, leaf_hi = leaf_arrays(bvh.leaf_perm, boxes,
                                              jnp.ones((n_built,), bool))
     node_lo, node_hi = fit_nodes(leaf_lo, leaf_hi, depth)
+    node_lo, node_hi = encode_nodes(node_lo, node_hi, depth, config)
     return BVH4(node_lo=node_lo, node_hi=node_hi, leaf_tri=leaf_tri,
                 triangles=_point_soup(points), leaf_perm=bvh.leaf_perm)

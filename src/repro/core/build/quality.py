@@ -24,7 +24,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..bvh import BVH4, depth_of, level_offset
+from functools import partial
+
+from ..bvh import BVH4, DatapathConfig, depth_of, level_offset, resolve_config
 from ..types import Ray, Triangle, make_ray
 from ..wavefront import trace_wavefront
 from .sah import _half_area
@@ -38,14 +40,20 @@ class TreeStats(NamedTuple):
     depth: int
     n_nodes: int
     n_leaves: int
-    occupancy: float  # occupied fraction of the 4**depth leaf slots
+    occupancy: float  # occupied fraction of the arity**depth leaf slots
     sah_cost: float  # model: SAH expectation relative to the root box
-    mean_quadbox_jobs: float  # measured: OpQuadbox jobs per probe ray
+    mean_quadbox_jobs: float  # measured: box-test jobs per probe ray
     mean_triangle_jobs: float  # measured: OpTriangle jobs per probe ray
     mean_jobs: float  # the headline number: quadbox + triangle
+    # --- per-config fields (DatapathConfig; DESIGN.md §12) ---
+    arity: int  # BVH branching factor the tree was built at
+    bytes_per_node: int  # analytic node-box storage (config codec)
+    compression_ratio: float  # raw-f32 24 B/node over bytes_per_node
+    mean_branching_factor: float  # mean live children per live internal node
 
 
-def sah_cost(bvh: BVH4, c_box: float = 1.0, c_tri: float = 1.0) -> float:
+def sah_cost(bvh: BVH4, c_box: float = 1.0, c_tri: float = 1.0,
+             arity: int | None = None) -> float:
     """SAH expected traversal cost of the tree.
 
     ``sum_internal c_box * A(n) / A(root) + sum_leaf c_tri * A(l) / A(root)``
@@ -53,8 +61,9 @@ def sah_cost(bvh: BVH4, c_box: float = 1.0, c_tri: float = 1.0) -> float:
     triangle each in this layout, so the triangle term needs no
     primitive-count weight.
     """
-    depth = depth_of(bvh)
-    leaf_start = level_offset(depth)
+    arity = 4 if arity is None else arity
+    depth = depth_of(bvh, arity)
+    leaf_start = level_offset(depth, arity)
     area = _half_area(bvh.node_lo, bvh.node_hi)
     valid = jnp.all(bvh.node_hi >= bvh.node_lo, axis=-1)
     area = jnp.where(valid, area, 0.0)
@@ -97,31 +106,50 @@ def probe_rays(bvh: BVH4, n: int = 256, seed: int = 0) -> Ray:
     return make_ray(jnp.asarray(org), jnp.asarray(tgt - org))
 
 
-@jax.jit
-def _probe_trace(bvh: BVH4, rays: Ray):
-    rec = trace_wavefront(bvh, rays, depth_of(bvh))
+@partial(jax.jit, static_argnums=(2,))
+def _probe_trace(bvh: BVH4, rays: Ray, config: DatapathConfig):
+    rec = trace_wavefront(bvh, rays, depth_of(bvh, config.arity),
+                          config=config)
     return rec.quadbox_jobs, rec.triangle_jobs
 
 
 def mean_jobs_per_ray(bvh: BVH4, rays: Ray | None = None,
-                      probes: int = 256) -> tuple[float, float]:
-    """Measured (mean OpQuadbox, mean OpTriangle) jobs per ray — the
+                      probes: int = 256,
+                      config: DatapathConfig | None = None
+                      ) -> tuple[float, float]:
+    """Measured (mean box-test, mean OpTriangle) jobs per ray — the
     deterministic tree-quality metric.  Uses :func:`probe_rays` when no
     ray batch is given."""
     if rays is None:
         rays = probe_rays(bvh, probes)
-    qb, tr = _probe_trace(bvh, rays)
+    qb, tr = _probe_trace(bvh, rays, resolve_config(config))
     return float(jnp.mean(qb.astype(jnp.float32))), \
         float(jnp.mean(tr.astype(jnp.float32)))
 
 
+def mean_branching_factor(bvh: BVH4, arity: int = 4) -> float:
+    """Mean live (non-empty-box) children per live internal node — how
+    full the tree keeps each box-test job's `arity` lanes."""
+    depth = depth_of(bvh, arity)
+    n_internal = level_offset(depth, arity)
+    valid = jnp.all(bvh.node_hi >= bvh.node_lo, axis=-1)
+    # children of internal node k are nodes arity*k+1 .. arity*k+arity,
+    # contiguous and in parent order over nodes 1..num_nodes-1
+    child_live = valid[1:].reshape(n_internal, arity).sum(axis=1)
+    live_internal = valid[:n_internal]
+    denom = jnp.maximum(jnp.sum(live_internal), 1)
+    return float(jnp.sum(jnp.where(live_internal, child_live, 0)) / denom)
+
+
 def tree_stats(bvh: BVH4, builder: str = "?", rays: Ray | None = None,
-               probes: int = 256) -> TreeStats:
+               probes: int = 256,
+               config: DatapathConfig | None = None) -> TreeStats:
     """Everything :class:`TreeStats` reports, from one tree."""
-    depth = depth_of(bvh)
+    config = resolve_config(config)
+    depth = depth_of(bvh, config.arity)
     n_leaves = int(bvh.leaf_tri.shape[0])
     occupied = int(jnp.sum(bvh.leaf_tri >= 0))
-    qb, tr = mean_jobs_per_ray(bvh, rays, probes)
+    qb, tr = mean_jobs_per_ray(bvh, rays, probes, config)
     return TreeStats(
         builder=builder,
         n_triangles=int(bvh.triangles.a.shape[0]),
@@ -129,8 +157,12 @@ def tree_stats(bvh: BVH4, builder: str = "?", rays: Ray | None = None,
         n_nodes=int(bvh.node_lo.shape[0]),
         n_leaves=n_leaves,
         occupancy=occupied / n_leaves,
-        sah_cost=sah_cost(bvh),
+        sah_cost=sah_cost(bvh, arity=config.arity),
         mean_quadbox_jobs=qb,
         mean_triangle_jobs=tr,
         mean_jobs=qb + tr,
+        arity=config.arity,
+        bytes_per_node=config.box_bytes_per_node,
+        compression_ratio=24.0 / config.box_bytes_per_node,
+        mean_branching_factor=mean_branching_factor(bvh, config.arity),
     )

@@ -26,28 +26,43 @@ was degenerate at build time reappears the moment motion gives it area.
 """
 from __future__ import annotations
 
-from ..bvh import BVH4, depth_of, fit_nodes, leaf_arrays, nondegenerate_mask
+from ..bvh import (
+    BVH4,
+    DatapathConfig,
+    depth_of,
+    encode_nodes,
+    fit_nodes,
+    leaf_arrays,
+    nondegenerate_mask,
+    resolve_config,
+)
 from ..types import Triangle, aabb_of_triangles
 
 
-def refit(bvh: BVH4, triangles: Triangle) -> BVH4:
+def refit(bvh: BVH4, triangles: Triangle,
+          config: DatapathConfig | None = None) -> BVH4:
     """Re-fit ``bvh``'s boxes around ``triangles``, keeping its topology.
 
     ``triangles`` must be the same soup with moved vertices (same count,
     same order — index ``i`` still means triangle ``i``).  Jittable; the
-    depth is recovered statically from the leaf array length.
+    depth is recovered statically from the leaf array length.  ``config``
+    must match the build's config: the arity fixes the implicit layout and
+    the node-box codec is re-applied each frame, so a refit frame encodes
+    exactly as a fresh build of the moved soup would.
     """
+    config = resolve_config(config)
     n = triangles.a.shape[0]
     n_built = bvh.triangles.a.shape[0]
     if n != n_built:
         raise ValueError(
             f"refit needs the built soup's {n_built} triangles, got {n} "
             "(topology is preserved -- rebuild to change the soup)")
-    depth = depth_of(bvh)
+    depth = depth_of(bvh, config.arity)
 
     leaf_tri, leaf_lo, leaf_hi = leaf_arrays(
         bvh.leaf_perm, aabb_of_triangles(triangles),
         nondegenerate_mask(triangles))
-    node_lo, node_hi = fit_nodes(leaf_lo, leaf_hi, depth)
+    node_lo, node_hi = fit_nodes(leaf_lo, leaf_hi, depth, config.arity)
+    node_lo, node_hi = encode_nodes(node_lo, node_hi, depth, config)
     return BVH4(node_lo=node_lo, node_hi=node_hi, leaf_tri=leaf_tri,
                 triangles=triangles, leaf_perm=bvh.leaf_perm)

@@ -42,7 +42,16 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from ..bvh import BVH4, bvh4_depth, fit_nodes, leaf_arrays, nondegenerate_mask
+from ..bvh import (
+    BVH4,
+    DatapathConfig,
+    bvh_depth,
+    encode_nodes,
+    fit_nodes,
+    leaf_arrays,
+    nondegenerate_mask,
+    resolve_config,
+)
 from ..types import Box, Triangle, aabb_of_triangles
 from . import register_builder
 
@@ -56,23 +65,27 @@ def _half_area(lo: jax.Array, hi: jax.Array) -> jax.Array:
     return d[..., 0] * d[..., 1] + d[..., 1] * d[..., 2] + d[..., 2] * d[..., 0]
 
 
-def sah_leaf_perm(boxes: Box, depth: int, bins: int = BINS) -> jax.Array:
+def sah_leaf_perm(boxes: Box, depth: int, bins: int = BINS,
+                  arity: int = 4) -> jax.Array:
     """Binned-SAH leaf-slot assignment over per-primitive AABBs.
 
     The primitive-agnostic core of the SAH builder (steps 1-4 of the
     module docstring): the whole split recursion consumes only boxes and
     centroids, so triangle soups and point clouds
-    (:mod:`repro.core.build.points`) share it.  Returns the ``(4**depth,)``
-    slot permutation (-1 = empty pad slot).
+    (:mod:`repro.core.build.points`) share it.  The ``arity``-wide split
+    emerges from ``log2(arity)`` consecutive binary rounds per tree level
+    (2 for BVH4, 3 for BVH8).  Returns the ``(arity**depth,)`` slot
+    permutation (-1 = empty pad slot).
     """
     n = boxes.lo.shape[0]
-    n_leaves = 4**depth
+    n_leaves = arity**depth
+    binary_rounds = depth * {4: 2, 8: 3}[arity]
     centroid = 0.5 * (boxes.lo + boxes.hi)
     tri_ids = jnp.arange(n, dtype=jnp.int32)
 
     # seg[i]: which node of the current binary level triangle i sits in
     seg = jnp.zeros((n,), jnp.int32)
-    for level in range(2 * depth):
+    for level in range(binary_rounds):
         n_seg = 2**level  # static: the complete tree fixes the node count
         cap_child = n_leaves // 2**(level + 1)  # leaf slots per child
 
@@ -131,16 +144,20 @@ def sah_leaf_perm(boxes: Box, depth: int, bins: int = BINS) -> jax.Array:
 
 @register_builder("sah")
 def build_sah(tri: Triangle, depth: int | None = None,
+              config: DatapathConfig | None = None,
               bins: int = BINS) -> BVH4:
-    """Build a BVH4 with binned-SAH splits.  ``depth``/``bins`` are static."""
+    """Build a wide BVH with binned-SAH splits.  ``depth``/``config``/
+    ``bins`` are static."""
+    config = resolve_config(config)
     n = tri.a.shape[0]
     if depth is None:
-        depth = bvh4_depth(n)
+        depth = bvh_depth(n, config.arity)
 
     boxes = aabb_of_triangles(tri)
-    leaf_perm = sah_leaf_perm(boxes, depth, bins)
+    leaf_perm = sah_leaf_perm(boxes, depth, bins, config.arity)
     leaf_tri, leaf_lo, leaf_hi = leaf_arrays(leaf_perm, boxes,
                                              nondegenerate_mask(tri))
-    node_lo, node_hi = fit_nodes(leaf_lo, leaf_hi, depth)
+    node_lo, node_hi = fit_nodes(leaf_lo, leaf_hi, depth, config.arity)
+    node_lo, node_hi = encode_nodes(node_lo, node_hi, depth, config)
     return BVH4(node_lo=node_lo, node_hi=node_hi, leaf_tri=leaf_tri,
                 triangles=tri, leaf_perm=leaf_perm)

@@ -1,4 +1,5 @@
-"""BVH4: the implicit 4-wide acceleration structure the datapath traverses.
+"""BVH4/BVH8: the implicit wide acceleration structure the datapath
+traverses.
 
 The paper's OpQuadbox tests one ray against *four* AABBs because a hardware
 ray tracer traverses a 4-wide BVH (RayCore-style unified pipeline).  This
@@ -11,10 +12,21 @@ backend, sharding knob and Pallas kernel consumes any builder's tree
 unchanged.
 
 The implicit layout keeps builders and refit allocation-free and jittable:
-node ``k`` has children ``4k+1 .. 4k+4``; level ``l`` starts at offset
-``(4^l - 1) / 3``.  Empty (padded) leaves carry inverted boxes
-(lo=+inf, hi=-inf) which can never intersect, so traversal needs no
-validity bitmap.
+for arity ``A``, node ``k`` has children ``A*k+1 .. A*k+A``; level ``l``
+starts at offset ``(A^l - 1) / (A - 1)``.  Empty (padded) leaves carry
+inverted boxes (lo=+inf, hi=-inf) which can never intersect, so traversal
+needs no validity bitmap.
+
+:class:`DatapathConfig` is the paper's research program in one record: the
+datapath knobs RayFlex sweeps in RTL (pipeline widths, stack sizing,
+shared node formats) as their software twins — BVH arity, traversal stack
+depth, box-test precision, and the node box format.  It is defined once
+here and threaded (as a *static* argument, like ``depth``) through
+builders, both engines, the fused Pallas kernel and the session API.
+The reduced-precision formats are **conservative**: boxes are only ever
+widened, so traversal under any config visits a superset of the exact
+tree's nodes — closest-hit results stay bit-identical to fp32 while job
+counters may grow (the tested contract; see DESIGN.md §12).
 """
 from __future__ import annotations
 
@@ -26,48 +38,128 @@ import jax.numpy as jnp
 
 from .types import Box, Triangle
 
+BOX_PRECISIONS = ("fp32", "bf16")
+NODE_FORMATS = ("fp32", "compressed")
+
+
+class DatapathConfig(NamedTuple):
+    """Static datapath configuration (hashable: python scalars only).
+
+    * ``arity`` — BVH branching factor (4 or 8); one box-test job covers
+      ``arity`` child AABBs.
+    * ``stack_size`` — per-ray traversal stack slots.  Pushing past
+      capacity drops the push and sets the per-ray ``stack_overflow``
+      flag (identically in every engine) instead of corrupting the walk.
+    * ``precision`` — box storage precision: ``"fp32"`` (exact) or
+      ``"bf16"`` (boxes conservatively widened onto the bf16 grid, so
+      the Pallas kernel can keep them as real bf16 rows in VMEM).
+    * ``node_format`` — ``"fp32"`` or ``"compressed"``: parent-relative
+      8-bit quantized child boxes (decoded at build into conservative
+      bf16-grid f32 arrays; 6 analytic bytes/node vs 24).
+    """
+    arity: int = 4
+    stack_size: int = 64
+    precision: str = "fp32"
+    node_format: str = "fp32"
+
+    @property
+    def tag(self) -> str:
+        """Stable id used in golden keys, bench rows and cache keys."""
+        return (f"bvh{self.arity}_s{self.stack_size}"
+                f"_{self.precision}_{self.node_format}")
+
+    @property
+    def exact_boxes(self) -> bool:
+        """True iff node boxes are bit-exact f32 (no conservative widen)."""
+        return self.precision == "fp32" and self.node_format == "fp32"
+
+    @property
+    def packed_box_dtype(self):
+        """Storage dtype for node-box rows in the packed Pallas operand.
+
+        bf16 and compressed boxes land exactly on the bf16 grid by
+        construction, so storing bf16 rows halves VMEM with a lossless
+        upcast in-kernel (parity with the wavefront engine preserved).
+        """
+        return jnp.float32 if self.exact_boxes else jnp.bfloat16
+
+    @property
+    def box_bytes_per_node(self) -> int:
+        """Analytic node-box storage cost (lo+hi, 3 axes) per node."""
+        if self.node_format == "compressed":
+            return 6                      # u8 per axis per bound
+        return 12 if self.precision == "bf16" else 24
+
+    def validate(self) -> "DatapathConfig":
+        if self.arity not in (4, 8):
+            raise ValueError(f"arity must be 4 or 8, got {self.arity}")
+        if self.stack_size < 1:
+            raise ValueError(f"stack_size must be >= 1, got {self.stack_size}")
+        if self.precision not in BOX_PRECISIONS:
+            raise ValueError(f"precision must be one of {BOX_PRECISIONS}, "
+                             f"got {self.precision!r}")
+        if self.node_format not in NODE_FORMATS:
+            raise ValueError(f"node_format must be one of {NODE_FORMATS}, "
+                             f"got {self.node_format!r}")
+        return self
+
+
+DEFAULT_CONFIG = DatapathConfig()
+
+
+def resolve_config(config: DatapathConfig | None) -> DatapathConfig:
+    """``None`` -> the seed-equivalent default (BVH4 / fp32 / fp32)."""
+    if config is None:
+        return DEFAULT_CONFIG
+    return config.validate()
+
 
 class BVH4(NamedTuple):
-    node_lo: jax.Array  # (num_nodes, 3) f32 -- implicit 4-ary heap, root first
+    node_lo: jax.Array  # (num_nodes, 3) f32 -- implicit A-ary heap, root first
     node_hi: jax.Array  # (num_nodes, 3) f32
-    leaf_tri: jax.Array  # (4**depth,) i32 -- triangle index per leaf, -1 = pad
+    leaf_tri: jax.Array  # (A**depth,) i32 -- triangle index per leaf, -1 = pad
     triangles: Triangle  # original (unsorted) triangle soup, (N, 3)
-    leaf_perm: jax.Array  # (4**depth,) i32 -- the builder's slot assignment
+    leaf_perm: jax.Array  # (A**depth,) i32 -- the builder's slot assignment
     # *before* the degenerate cull (-1 = genuinely empty pad slot), so refit
     # can re-evaluate the cull for the current geometry each frame
 
 
+def bvh_depth(n_triangles: int, arity: int = 4) -> int:
+    """Static tree depth: smallest D with arity**D >= n (min 1)."""
+    return max(1, math.ceil(math.log(max(n_triangles, 2), arity)))
+
+
 def bvh4_depth(n_triangles: int) -> int:
     """Static tree depth: smallest D with 4**D >= n (min 1)."""
-    return max(1, math.ceil(math.log(max(n_triangles, 2), 4)))
+    return bvh_depth(n_triangles, 4)
 
 
-def level_offset(level: int) -> int:
-    return (4**level - 1) // 3
+def level_offset(level: int, arity: int = 4) -> int:
+    return (arity**level - 1) // (arity - 1)
 
 
-def num_nodes(depth: int) -> int:
-    return level_offset(depth + 1)
+def num_nodes(depth: int, arity: int = 4) -> int:
+    return level_offset(depth + 1, arity)
 
 
-def depth_of(bvh: BVH4) -> int:
-    """Recover the static depth from the leaf array length (4**depth)."""
-    return bvh4_depth(bvh.leaf_tri.shape[0])
+def depth_of(bvh: BVH4, arity: int = 4) -> int:
+    """Recover the static depth from the leaf array length (arity**depth)."""
+    return bvh_depth(bvh.leaf_tri.shape[0], arity)
 
 
 def fit_nodes(leaf_lo: jax.Array, leaf_hi: jax.Array,
-              depth: int) -> tuple[jax.Array, jax.Array]:
+              depth: int, arity: int = 4) -> tuple[jax.Array, jax.Array]:
     """Bottom-up AABB fit over the implicit tree: ``depth`` vectorised
-    4-to-1 reduction sweeps from ``(4**depth, 3)`` leaf boxes to the full
-    ``(num_nodes, 3)`` node arrays (root first).  Shared by every builder
-    and by :func:`repro.core.build.refit` — inverted (empty) leaves
+    ``arity``-to-1 reduction sweeps from ``(arity**depth, 3)`` leaf boxes to
+    the full ``(num_nodes, 3)`` node arrays (root first).  Shared by every
+    builder and by :func:`repro.core.build.refit` — inverted (empty) leaves
     propagate as inverted internal boxes for free.
     """
     levels_lo, levels_hi = [leaf_lo], [leaf_hi]
     cur_lo, cur_hi = leaf_lo, leaf_hi
     for _ in range(depth):
-        cur_lo = cur_lo.reshape(-1, 4, 3).min(axis=1)
-        cur_hi = cur_hi.reshape(-1, 4, 3).max(axis=1)
+        cur_lo = cur_lo.reshape(-1, arity, 3).min(axis=1)
+        cur_hi = cur_hi.reshape(-1, arity, 3).max(axis=1)
         levels_lo.append(cur_lo)
         levels_hi.append(cur_hi)
     node_lo = jnp.concatenate(levels_lo[::-1], axis=0)  # root (level 0) first
@@ -104,8 +196,108 @@ def leaf_arrays(leaf_perm: jax.Array, boxes: Box,
     return leaf_tri, leaf_lo, leaf_hi
 
 
-def child_boxes(bvh: BVH4, node_idx: jax.Array) -> Box:
-    """The 4 child AABBs of an internal node -- one OpQuadbox operand."""
-    base = 4 * node_idx + 1
-    idx = base[..., None] + jnp.arange(4, dtype=jnp.int32)
+def child_boxes(bvh: BVH4, node_idx: jax.Array, arity: int = 4) -> Box:
+    """The ``arity`` child AABBs of an internal node -- one box-test job."""
+    base = arity * node_idx + 1
+    idx = base[..., None] + jnp.arange(arity, dtype=jnp.int32)
     return Box(lo=bvh.node_lo[idx], hi=bvh.node_hi[idx])
+
+
+# ---------------------------------------------------------------------------
+# Conservative node-box codecs (DatapathConfig.precision / .node_format).
+#
+# Both codecs are *decode-at-build*: the stored BVH always carries plain f32
+# node arrays, but for reduced-precision configs those f32 values are the
+# exact decode of the narrow format (every value lands on the bf16 grid).
+# Every engine therefore consumes identical arrays — wavefront / per-ray /
+# fused-Pallas parity under any config is structural, not re-proven per
+# engine — while the Pallas packer is free to store the rows as genuine
+# bf16 (lossless upcast) for the VMEM saving the format exists for.
+#
+# Conservativeness: lo is only ever moved down, hi only up, so a decoded
+# box is a superset of the exact box.  Traversal can then only *add*
+# visited nodes (never cull a node containing the true closest hit), which
+# is the superset contract the fuzz/golden tests pin.
+# ---------------------------------------------------------------------------
+
+_BF16_REL = 2.0**-7   # widening bias; dominates the bf16 half-ulp of 2^-9
+_BF16_ABS = 1e-30     # absolute floor so exact-zero bounds still move
+
+
+def _bf16_down(x: jax.Array) -> jax.Array:
+    """Largest-practical bf16-grid value <= x (widen-then-round: the bias
+    2^-7 strictly dominates the cast's half-ulp 2^-9, so the rounded result
+    provably stays below x).  Non-finite values pass through unchanged —
+    padded leaves keep their inverted (+inf, -inf) boxes."""
+    widened = x - _BF16_REL * jnp.abs(x) - _BF16_ABS
+    snapped = widened.astype(jnp.bfloat16).astype(jnp.float32)
+    return jnp.where(jnp.isfinite(x), snapped, x)
+
+
+def _bf16_up(x: jax.Array) -> jax.Array:
+    """Smallest-practical bf16-grid value >= x (mirror of :func:`_bf16_down`)."""
+    widened = x + _BF16_REL * jnp.abs(x) + _BF16_ABS
+    snapped = widened.astype(jnp.bfloat16).astype(jnp.float32)
+    return jnp.where(jnp.isfinite(x), snapped, x)
+
+
+def quantize_boxes_bf16(lo: jax.Array, hi: jax.Array
+                        ) -> tuple[jax.Array, jax.Array]:
+    """Conservatively widen boxes onto the bf16 grid (lo down, hi up)."""
+    return _bf16_down(lo), _bf16_up(hi)
+
+
+def compress_nodes(node_lo: jax.Array, node_hi: jax.Array, depth: int,
+                   arity: int = 4) -> tuple[jax.Array, jax.Array]:
+    """Parent-relative 8-bit child-box quantization, decoded at build.
+
+    Top-down, level by level: the root keeps its f32 box; every other
+    node's bounds are snapped to a 256-step grid spanning its (already
+    decoded) parent's box, with a one-step conservative fixup so
+    ``decoded_lo <= lo`` and ``decoded_hi >= hi`` always hold.  The chain
+    parent->child uses *decoded* parent bounds, exactly as a hardware
+    decoder walking the compressed tree would.  Finally every bound is
+    snapped conservatively onto the bf16 grid so the packed Pallas operand
+    can store 16-bit rows losslessly.  Analytic cost: 6 bytes/node
+    (u8 x 3 axes x lo/hi) vs 24 for raw f32.
+    """
+    out_lo, out_hi = [node_lo[:1]], [node_hi[:1]]  # root stays exact
+    for level in range(1, depth + 1):
+        start, stop = level_offset(level, arity), level_offset(level + 1, arity)
+        lo, hi = node_lo[start:stop], node_hi[start:stop]
+        # decoded parent boxes, repeated over each parent's `arity` children
+        p_lo = jnp.repeat(out_lo[-1], arity, axis=0)
+        p_hi = jnp.repeat(out_hi[-1], arity, axis=0)
+        step = (p_hi - p_lo) / 255.0
+        safe = jnp.where(step > 0.0, step, 1.0)
+        q_lo = jnp.clip(jnp.floor((lo - p_lo) / safe), 0.0, 255.0)
+        q_hi = jnp.clip(jnp.ceil((hi - p_lo) / safe), 0.0, 255.0)
+        d_lo = p_lo + q_lo * safe
+        d_hi = p_lo + q_hi * safe
+        # one-step fixup: f32 rounding in the divide can land one grid
+        # step short of conservative; nudge and clamp to the parent box
+        d_lo = jnp.maximum(p_lo, jnp.where(d_lo > lo, d_lo - safe, d_lo))
+        d_hi = jnp.minimum(p_hi, jnp.where(d_hi < hi, d_hi + safe, d_hi))
+        # degenerate (step == 0) and non-finite (empty-pad) boxes pass
+        # through: an empty parent's children are empty, a zero-extent
+        # parent's children equal the parent bound
+        d_lo = jnp.where((step > 0.0) & jnp.isfinite(lo), d_lo, lo)
+        d_hi = jnp.where((step > 0.0) & jnp.isfinite(hi), d_hi, hi)
+        out_lo.append(_bf16_down(d_lo))
+        out_hi.append(_bf16_up(d_hi))
+    return jnp.concatenate(out_lo, axis=0), jnp.concatenate(out_hi, axis=0)
+
+
+def encode_nodes(node_lo: jax.Array, node_hi: jax.Array, depth: int,
+                 config: DatapathConfig | None) -> tuple[jax.Array, jax.Array]:
+    """Apply the config's node-box codec to freshly fit node arrays.
+
+    The single post-:func:`fit_nodes` hook every builder and refit path
+    calls, so a refit frame encodes exactly as a fresh build would (the
+    zero-retrace contract extends to every config)."""
+    config = resolve_config(config)
+    if config.node_format == "compressed":
+        return compress_nodes(node_lo, node_hi, depth, config.arity)
+    if config.precision == "bf16":
+        return quantize_boxes_bf16(node_lo, node_hi)
+    return node_lo, node_hi

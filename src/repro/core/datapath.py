@@ -61,15 +61,32 @@ def fmin(a: jax.Array, b: jax.Array) -> jax.Array:
     return jnp.where(a < b, a, b)
 
 
-def quadsort(keys: jax.Array, *payloads: jax.Array):
-    """Paper's QuadSortRecFN: 4-input sorting network (5 compare-exchanges).
+# Compare-exchange schedules per sort width.  4 is the paper's
+# QuadSortRecFN network; 8 is Batcher's odd-even merge sort (19 CE) for the
+# BVH8 datapath twin (DatapathConfig.arity == 8).
+SORT_NETWORKS = {
+    4: [(0, 1), (2, 3), (0, 2), (1, 3), (1, 2)],
+    8: [(0, 1), (2, 3), (4, 5), (6, 7),
+        (0, 2), (1, 3), (4, 6), (5, 7),
+        (1, 2), (5, 6),
+        (0, 4), (1, 5), (2, 6), (3, 7),
+        (2, 4), (3, 5),
+        (1, 2), (3, 4), (5, 6)],
+}
 
-    ``keys``: (..., 4).  Payload arrays are permuted alongside the keys (this
-    is QuadSortRecFNWithIndex when a payload is ``arange(4)``).  Stable for
-    the (0,1)(2,3)(0,2)(1,3)(1,2) network under ``<`` compares.
+
+def boxsort(keys: jax.Array, *payloads: jax.Array):
+    """Fixed-width sorting network over the trailing axis.
+
+    ``keys``: (..., W) with ``W`` in :data:`SORT_NETWORKS`.  Payload arrays
+    are permuted alongside the keys.  Width 4 runs the paper's exact
+    QuadSortRecFN schedule (see :func:`quadsort`); width 8 runs Batcher's
+    odd-even merge network.
     """
-    cols = [keys[..., i] for i in range(4)]
-    pl = [[p[..., i] for i in range(4)] for p in payloads]
+    width = keys.shape[-1]
+    pairs = SORT_NETWORKS[width]
+    cols = [keys[..., i] for i in range(width)]
+    pl = [[p[..., i] for i in range(width)] for p in payloads]
 
     def cas(i, j):
         lt = cols[i] < cols[j]
@@ -77,12 +94,22 @@ def quadsort(keys: jax.Array, *payloads: jax.Array):
         for p in pl:
             p[i], p[j] = jnp.where(lt, p[i], p[j]), jnp.where(lt, p[j], p[i])
 
-    lt_pairs = [(0, 1), (2, 3), (0, 2), (1, 3), (1, 2)]
-    for i, j in lt_pairs:
+    for i, j in pairs:
         cas(i, j)
     out_keys = jnp.stack(cols, axis=-1)
     out_payloads = tuple(jnp.stack(p, axis=-1) for p in pl)
     return (out_keys, *out_payloads)
+
+
+def quadsort(keys: jax.Array, *payloads: jax.Array):
+    """Paper's QuadSortRecFN: 4-input sorting network (5 compare-exchanges).
+
+    ``keys``: (..., 4).  Payload arrays are permuted alongside the keys (this
+    is QuadSortRecFNWithIndex when a payload is ``arange(4)``).  Stable for
+    the (0,1)(2,3)(0,2)(1,3)(1,2) network under ``<`` compares.
+    """
+    assert keys.shape[-1] == 4, keys.shape
+    return boxsort(keys, *payloads)
 
 
 # ---------------------------------------------------------------------------
@@ -91,9 +118,11 @@ def quadsort(keys: jax.Array, *payloads: jax.Array):
 
 
 def ray_box_test(ray: Ray, boxes: Box) -> QuadBoxResult:
-    """Batched ray-vs-4-AABB intersection.
+    """Batched ray-vs-W-AABB intersection (W = 4 or 8 child boxes).
 
-    ray fields: (...,) batch; boxes: (..., 4, 3) lo/hi.
+    ray fields: (...,) batch; boxes: (..., W, 3) lo/hi.  W is the BVH
+    arity (``DatapathConfig.arity``): the 4-wide case is the paper's
+    OpQuadbox bit-for-bit; 8-wide swaps in the 8-input sort network.
     """
     o = ray.origin[..., None, :]  # (..., 1, 3)
     inv = ray.inv[..., None, :]
@@ -120,13 +149,14 @@ def ray_box_test(ray: Ray, boxes: Box) -> QuadBoxResult:
     inf = jnp.full_like(tmin, jnp.inf)
     tmax = fmin(t_far[..., 2], fmin(t_far[..., 1], fmin(t_far[..., 0], inf)))
 
-    # stage 5: intersect = (tmin <= tmax)   (4 comparators)
-    intersect = tmin <= tmax  # (..., 4)
+    # stage 5: intersect = (tmin <= tmax)   (W comparators)
+    intersect = tmin <= tmax  # (..., W)
 
-    # stage 10: two quad-sorting networks (values and indices) over tmin
-    idx = jnp.broadcast_to(jnp.arange(4, dtype=jnp.int32), tmin.shape)
+    # stage 10: two sorting networks (values and indices) over tmin
+    width = boxes.lo.shape[-2]
+    idx = jnp.broadcast_to(jnp.arange(width, dtype=jnp.int32), tmin.shape)
     hit_i = intersect.astype(jnp.int32)
-    tmin_sorted, idx_sorted, hit_sorted = quadsort(tmin, idx, hit_i)
+    tmin_sorted, idx_sorted, hit_sorted = boxsort(tmin, idx, hit_i)
     return QuadBoxResult(tmin=tmin_sorted, box_index=idx_sorted,
                          is_intersect=hit_sorted.astype(bool))
 

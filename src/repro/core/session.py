@@ -59,7 +59,7 @@ from .build import refit as refit_bvh
 from .build import tree_stats
 from .build.points import build_point_bvh, refit_points
 from .build.quality import TreeStats
-from .bvh import BVH4
+from .bvh import BVH4, DEFAULT_CONFIG, DatapathConfig, resolve_config
 from .dispatch import (
     ExecPlan,
     check_count,
@@ -141,8 +141,9 @@ class TraceResult(NamedTuple):
     t: jax.Array  # (R,) f32  hit distance (inf = miss)
     tri_index: jax.Array  # (R,) i32  index into the soup, -1 = miss
     hit: jax.Array  # (R,) bool
-    quadbox_jobs: jax.Array  # (R,) i32  per-ray OpQuadbox jobs issued
+    quadbox_jobs: jax.Array  # (R,) i32  per-ray box-test jobs issued
     triangle_jobs: jax.Array  # (R,) i32  per-ray OpTriangle jobs issued
+    stack_overflow: jax.Array  # (R,) bool  a push was dropped at capacity
     rounds: jax.Array  # ()   i32  batch-level rounds (= max per-ray jobs)
 
 
@@ -310,11 +311,12 @@ def _build_per_ray(scene: "Scene", ray_type: str, t_min: float,
                          "use backend='wavefront'")
 
     def run(bvh, rays):
-        rec = trace_rays(bvh, rays, scene.depth)
+        rec = trace_rays(bvh, rays, scene.depth, scene.config)
         # a ray is active for exactly quadbox_jobs consecutive rounds, so
         # the batch-level round count is the max per-ray job count
         return TraceResult(rec.t, rec.tri_index, rec.hit, rec.quadbox_jobs,
-                           rec.triangle_jobs, jnp.max(rec.quadbox_jobs))
+                           rec.triangle_jobs, rec.stack_overflow,
+                           jnp.max(rec.quadbox_jobs))
 
     return run
 
@@ -327,7 +329,7 @@ def _build_wavefront(scene: "Scene", ray_type: str, t_min: float,
     def run(bvh, rays):
         rec = trace_wavefront(bvh, rays, scene.depth,
                               ray_type=ray_type, t_min=t_min,
-                              max_rounds=max_rounds)
+                              max_rounds=max_rounds, config=scene.config)
         return TraceResult(*rec)  # field-for-field identical record
 
     return run
@@ -335,9 +337,10 @@ def _build_wavefront(scene: "Scene", ray_type: str, t_min: float,
 
 def _prepare_pallas_trace(scene: "Scene"):
     """The fused kernel's ``prepare`` hook: pack the BVH into its
-    resident rows-by-lanes operands once per scene version."""
+    resident rows-by-lanes operands once per scene version (the scene's
+    config picks the packed node dtype — bf16 configs halve node bytes)."""
     from ..kernels.traverse import pack_bvh  # deferred (circular init)
-    return pack_bvh
+    return lambda bvh: pack_bvh(bvh, scene.config)
 
 
 @register_trace_backend("pallas", ray_types=RAY_TYPES,
@@ -359,10 +362,12 @@ def _build_pallas_trace(scene: "Scene", ray_type: str, t_min: float,
 
     depth = scene.depth
 
+    config = scene.config
+
     def run(ctx, rays):
         rec = traverse_packed(ctx, rays, depth, ray_type=ray_type,
                               t_min=t_min, max_rounds=max_rounds,
-                              interpret=interpret)
+                              interpret=interpret, config=config)
         return TraceResult(*rec)  # WavefrontRecord: field-for-field match
 
     return run
@@ -479,7 +484,7 @@ def _validate_finite(tri: Triangle, where: str) -> None:
 
 # refit is jittable with static shapes, so one jit here means every
 # animation frame after the first re-enters one compiled sweep
-_refit_jit = jax.jit(refit_bvh)
+_refit_jit = jax.jit(refit_bvh, static_argnames=("config",))
 _refit_points_jit = jax.jit(refit_points)
 
 
@@ -507,25 +512,33 @@ class Scene:
     """
 
     def __init__(self, bvh: BVH4, depth: int, device=None,
-                 builder: str = "lbvh"):
+                 builder: str = "lbvh",
+                 config: DatapathConfig | None = None):
         if device is not None:
             bvh = jax.device_put(bvh, device)
         self.bvh = bvh
         self.depth = int(depth)
         self.builder = builder
+        #: the datapath twin the tree was built for (arity, stack size,
+        #: box precision, node codec) — every engine traces with it
+        self.config = resolve_config(config)
         #: bumped by :meth:`refit`; engines key their replicated copies on
         #: it so sharded queries pick up the new boxes
         self.version = 0
 
     @classmethod
     def from_triangles(cls, triangles, depth: int | None = None,
-                       device=None, builder: str = "lbvh") -> "Scene":
+                       device=None, builder: str = "lbvh",
+                       config: DatapathConfig | None = None) -> "Scene":
         """Build from a :class:`Triangle` soup or an ``(N, 3, 3)`` array of
-        per-triangle vertices, with the named registered builder."""
+        per-triangle vertices, with the named registered builder.
+        ``config`` selects the datapath twin (arity / stack size / box
+        precision / node codec); ``None`` is the BVH4-fp32 default."""
         triangles = _as_triangles(triangles)
         _validate_finite(triangles, "Scene.from_triangles")
-        res = build_structure(triangles, builder, depth)
-        return cls(res.bvh, res.depth, device, builder=res.builder)
+        res = build_structure(triangles, builder, depth, config=config)
+        return cls(res.bvh, res.depth, device, builder=res.builder,
+                   config=res.config)
 
     def refit(self, triangles) -> "Scene":
         """Update the scene's geometry in place, keeping its topology.
@@ -542,14 +555,15 @@ class Scene:
         _validate_finite(triangles, "Scene.refit")
         # the soup-size precondition lives in refit() itself (shape-static,
         # so it raises identically through the jitted path)
-        self.bvh = _refit_jit(self.bvh, triangles)
+        self.bvh = _refit_jit(self.bvh, triangles, config=self.config)
         self.version += 1
         return self
 
     def stats(self, rays=None, probes: int = 256) -> TreeStats:
         """Tree-quality metrics: SAH cost plus mean datapath jobs per ray
         measured on ``rays`` (or a deterministic probe batch)."""
-        return tree_stats(self.bvh, self.builder, rays=rays, probes=probes)
+        return tree_stats(self.bvh, self.builder, rays=rays, probes=probes,
+                          config=self.config)
 
     @property
     def num_triangles(self) -> int:
@@ -560,7 +574,8 @@ class Scene:
 
     def __repr__(self):
         return (f"Scene(num_triangles={self.num_triangles}, "
-                f"depth={self.depth}, builder={self.builder!r})")
+                f"depth={self.depth}, builder={self.builder!r}, "
+                f"config={self.config.tag!r})")
 
 
 class VectorIndex:
@@ -644,12 +659,16 @@ class PointCloudScene:
     """
 
     def __init__(self, bvh: BVH4, depth: int, device=None,
-                 builder: str = "lbvh"):
+                 builder: str = "lbvh",
+                 config: DatapathConfig | None = None):
         if device is not None:
             bvh = jax.device_put(bvh, device)
         self.bvh = bvh
         self.depth = int(depth)
         self.builder = builder
+        #: the datapath twin the tree was built for (arity, stack size,
+        #: box precision, node codec) — every engine traces with it
+        self.config = resolve_config(config)
         #: bumped by :meth:`refit`; engines key replicated copies, packed
         #: kernel operands and brute-path closures on it
         self.version = 0
@@ -878,14 +897,16 @@ class QueryEngine:
         return "wavefront"
 
     def _scene_resident_bytes(self) -> int:
-        """Bytes the fused traversal kernel keeps resident per tile:
-        node boxes + leaf table + triangle soup (f32/i32 = 4 B each)."""
+        """Bytes the fused traversal kernel keeps resident per tile: node
+        boxes (at the scene config's packed dtype — bf16 configs pack
+        2 B/scalar) + leaf table + triangle soup (f32/i32 = 4 B each)."""
         if self.scene is None:
             return 0
         bvh = self.scene.bvh
         n_nodes = bvh.node_lo.shape[0]
-        return 4 * (2 * n_nodes * 3 + bvh.leaf_tri.shape[0]
-                    + 9 * bvh.triangles.a.shape[0])
+        box_bytes = jnp.dtype(self.scene.config.packed_box_dtype).itemsize
+        return (box_bytes * 2 * n_nodes * 3
+                + 4 * (bvh.leaf_tri.shape[0] + 9 * bvh.triangles.a.shape[0]))
 
     def resolve_distance_backend(self) -> str:
         """The backend "auto" picks for distance queries: compiled Pallas
@@ -1162,6 +1183,7 @@ class QueryEngine:
                 hit=jnp.zeros((0,), bool),
                 quadbox_jobs=jnp.zeros((0,), jnp.int32),
                 triangle_jobs=jnp.zeros((0,), jnp.int32),
+                stack_overflow=jnp.zeros((0,), bool),
                 rounds=jnp.int32(0))
 
         plan = self._plan(n, shards, chunk_size,

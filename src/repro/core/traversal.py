@@ -1,16 +1,21 @@
-"""Batched BVH4 traversal: the unified Traversal-and-Intersection loop.
+"""Batched BVH traversal: the unified Traversal-and-Intersection loop.
 
 Each traversal step issues exactly the jobs the paper's datapath serves:
 
-* internal node  -> one **OpQuadbox** job (4 child AABBs, sorted-hit output
-  drives near-to-far ordering via the datapath's quad-sort),
-* leaf parent    -> four **OpTriangle** jobs (watertight Woop test); the
-  deferred division ``t = t_num / t_denom`` happens here, *outside* the
+* internal node  -> one **box-test** job (the node's ``arity`` child AABBs,
+  sorted-hit output drives near-to-far ordering via the datapath's sorting
+  network — the paper's quad-sort for BVH4, the 8-wide network for BVH8),
+* leaf parent    -> ``arity`` **OpTriangle** jobs (watertight Woop test);
+  the deferred division ``t = t_num / t_denom`` happens here, *outside* the
   datapath, exactly as the paper prescribes.
 
 The loop is a fixed-size-stack ``lax.while_loop`` vmapped over rays; on TPU
 the whole wavefront executes in lockstep which mirrors a fixed-latency
-pipeline fed by a scheduler.
+pipeline fed by a scheduler.  The stack size is a
+:class:`~repro.core.bvh.DatapathConfig` knob: pushing past capacity drops
+the push and raises the per-ray ``stack_overflow`` flag instead of
+silently corrupting the walk (every engine implements the identical
+drop-and-flag semantics, so results stay bit-equal even when overflowing).
 """
 from __future__ import annotations
 
@@ -19,11 +24,11 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .bvh import BVH4, child_boxes, level_offset
+from .bvh import BVH4, DatapathConfig, child_boxes, level_offset, resolve_config
 from .datapath import ray_box_test, ray_triangle_test
 from .types import Ray, Triangle
 
-STACK_SIZE = 64
+STACK_SIZE = 64  # DatapathConfig default (DEFAULT_CONFIG.stack_size)
 
 
 class HitRecord(NamedTuple):
@@ -32,6 +37,7 @@ class HitRecord(NamedTuple):
     hit: jax.Array  # (...,) bool
     quadbox_jobs: jax.Array  # (...,) i32  datapath job accounting
     triangle_jobs: jax.Array  # (...,) i32
+    stack_overflow: jax.Array  # (...,) bool  a push was dropped at capacity
 
 
 def _broadcast_ray(ray: Ray, shape: tuple) -> Ray:
@@ -43,36 +49,40 @@ def _gather_triangles(tri: Triangle, idx: jax.Array) -> Triangle:
     return Triangle(a=tri.a[safe], b=tri.b[safe], c=tri.c[safe])
 
 
-def trace_ray(bvh: BVH4, ray: Ray, depth: int) -> HitRecord:
+def trace_ray(bvh: BVH4, ray: Ray, depth: int,
+              config: DatapathConfig | None = None) -> HitRecord:
     """Closest-hit traversal for a single ray (vmap over this for batches)."""
-    leaf_parent_offset = level_offset(depth - 1)
-    leaf_offset = level_offset(depth)
+    config = resolve_config(config)
+    arity, stack_size = config.arity, config.stack_size
+    leaf_parent_offset = level_offset(depth - 1, arity)
+    leaf_offset = level_offset(depth, arity)
 
-    stack0 = jnp.zeros((STACK_SIZE,), jnp.int32)  # root = node 0 pre-pushed
+    stack0 = jnp.zeros((stack_size,), jnp.int32)  # root = node 0 pre-pushed
     state0 = (stack0, jnp.int32(1), jnp.float32(jnp.inf), jnp.int32(-1),
-              jnp.int32(0), jnp.int32(0))
+              jnp.int32(0), jnp.int32(0), jnp.bool_(False))
 
     def cond(state):
-        _, sp, _, _, _, _ = state
+        _, sp, _, _, _, _, _ = state
         return sp > 0
 
     def body(state):
-        stack, sp, t_best, best_tri, n_qb, n_tri = state
+        stack, sp, t_best, best_tri, n_qb, n_tri, overflow = state
         node = stack[sp - 1]
         sp = sp - 1
 
         is_leaf_parent = node >= leaf_parent_offset
 
-        # ---- OpQuadbox job on the 4 children --------------------------------
-        boxes = child_boxes(bvh, node)
+        # ---- box-test job on the `arity` children ---------------------------
+        boxes = child_boxes(bvh, node, arity)
         qb = ray_box_test(ray, boxes)
 
-        # ---- 4x OpTriangle jobs when children are leaves --------------------
-        leaf_pos = 4 * node + 1 - leaf_offset + jnp.arange(4, dtype=jnp.int32)
+        # ---- `arity` OpTriangle jobs when children are leaves ---------------
+        leaf_pos = (arity * node + 1 - leaf_offset
+                    + jnp.arange(arity, dtype=jnp.int32))
         leaf_pos = jnp.clip(leaf_pos, 0, bvh.leaf_tri.shape[0] - 1)
-        tri_idx = bvh.leaf_tri[leaf_pos]  # (4,), -1 = padded leaf
+        tri_idx = bvh.leaf_tri[leaf_pos]  # (arity,), -1 = padded leaf
         tris = _gather_triangles(bvh.triangles, tri_idx)
-        tr = ray_triangle_test(_broadcast_ray(ray, (4,)), tris)
+        tr = ray_triangle_test(_broadcast_ray(ray, (arity,)), tris)
         # external division (the datapath outputs num/denom only)
         t = tr.t_num / tr.t_denom
         valid = tr.hit & (tri_idx >= 0) & (t < t_best) & (t <= ray.extent)
@@ -83,26 +93,33 @@ def trace_ray(bvh: BVH4, ray: Ray, depth: int) -> HitRecord:
         t_best = jnp.where(leaf_better, leaf_t, t_best)
         best_tri = jnp.where(leaf_better, tri_idx[j], best_tri)
 
-        # ---- push hit children far-to-near (sorted output of the quad-sort) -
+        # ---- push hit children far-to-near (sorted output of the network) --
         def push_child(i, carry):
-            stack, sp = carry
-            slot = 3 - i  # reverse order: farthest first, nearest on top
+            stack, sp, overflow = carry
+            slot = arity - 1 - i  # reverse order: farthest first, nearest top
             ok = (~is_leaf_parent) & qb.is_intersect[slot] & (qb.tmin[slot] < t_best)
-            child = 4 * node + 1 + qb.box_index[slot]
-            stack = jnp.where(ok, stack.at[sp].set(child), stack)
-            sp = jnp.where(ok, sp + 1, sp)
-            return stack, sp
+            child = arity * node + 1 + qb.box_index[slot]
+            can = ok & (sp < stack_size)
+            overflow = overflow | (ok & (sp >= stack_size))
+            pos = jnp.minimum(sp, stack_size - 1)  # in-bounds even when full
+            stack = jnp.where(can, stack.at[pos].set(child), stack)
+            sp = jnp.where(can, sp + 1, sp)
+            return stack, sp, overflow
 
-        stack, sp = jax.lax.fori_loop(0, 4, push_child, (stack, sp))
+        stack, sp, overflow = jax.lax.fori_loop(
+            0, arity, push_child, (stack, sp, overflow))
         n_qb = n_qb + 1
-        n_tri = n_tri + jnp.where(is_leaf_parent, 4, 0)
-        return stack, sp, t_best, best_tri, n_qb, n_tri
+        n_tri = n_tri + jnp.where(is_leaf_parent, arity, 0)
+        return stack, sp, t_best, best_tri, n_qb, n_tri, overflow
 
-    stack, sp, t_best, best_tri, n_qb, n_tri = jax.lax.while_loop(cond, body, state0)
+    (stack, sp, t_best, best_tri,
+     n_qb, n_tri, overflow) = jax.lax.while_loop(cond, body, state0)
     return HitRecord(t=t_best, tri_index=best_tri, hit=best_tri >= 0,
-                     quadbox_jobs=n_qb, triangle_jobs=n_tri)
+                     quadbox_jobs=n_qb, triangle_jobs=n_tri,
+                     stack_overflow=overflow)
 
 
-def trace_rays(bvh: BVH4, rays: Ray, depth: int) -> HitRecord:
+def trace_rays(bvh: BVH4, rays: Ray, depth: int,
+               config: DatapathConfig | None = None) -> HitRecord:
     """Wavefront traversal: vmap of :func:`trace_ray` over a ray batch."""
-    return jax.vmap(lambda r: trace_ray(bvh, r, depth))(rays)
+    return jax.vmap(lambda r: trace_ray(bvh, r, depth, config))(rays)

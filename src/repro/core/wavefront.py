@@ -39,7 +39,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .bvh import BVH4, child_boxes, level_offset
+from .bvh import BVH4, DatapathConfig, child_boxes, level_offset, resolve_config
 from .datapath import ray_box_test, ray_triangle_test
 from .traversal import STACK_SIZE, _gather_triangles
 
@@ -54,6 +54,7 @@ class WavefrontRecord(NamedTuple):
     hit: jax.Array  # (R,) bool
     quadbox_jobs: jax.Array  # (R,) i32  per-ray OpQuadbox jobs issued
     triangle_jobs: jax.Array  # (R,) i32  per-ray OpTriangle jobs issued
+    stack_overflow: jax.Array  # (R,) bool  a push was dropped at capacity
     rounds: jax.Array  # ()   i32  batched rounds = batched OpQuadbox jobs
 
 
@@ -70,7 +71,8 @@ SHADOW_T_MIN = 1e-3  # default self-intersection epsilon for shadow rays
 
 def trace_wavefront(bvh: BVH4, rays, depth: int, ray_type: str = "closest",
                     t_min: float | None = None,
-                    max_rounds: int | None = None) -> WavefrontRecord:
+                    max_rounds: int | None = None,
+                    config: DatapathConfig | None = None) -> WavefrontRecord:
     """Traverse a whole ray batch with one batch-level loop.
 
     ``rays`` must carry a single leading batch axis (flatten first).
@@ -85,28 +87,31 @@ def trace_wavefront(bvh: BVH4, rays, depth: int, ray_type: str = "closest",
         raise ValueError(f"ray_type must be one of {RAY_TYPES}, got {ray_type!r}")
     if t_min is None:
         t_min = SHADOW_T_MIN if ray_type == "shadow" else 0.0
-    leaf_parent_offset = level_offset(depth - 1)
-    leaf_offset = level_offset(depth)
+    config = resolve_config(config)
+    arity, stack_size = config.arity, config.stack_size
+    leaf_parent_offset = level_offset(depth - 1, arity)
+    leaf_offset = level_offset(depth, arity)
     if max_rounds is None:
-        max_rounds = level_offset(depth)  # = number of internal nodes
+        max_rounds = level_offset(depth, arity)  # = number of internal nodes
 
     n_rays = rays.origin.shape[0]
     rows = jnp.arange(n_rays, dtype=jnp.int32)
     t_min = jnp.float32(t_min)
 
-    stack0 = jnp.zeros((n_rays, STACK_SIZE), jnp.int32)  # root pre-pushed
+    stack0 = jnp.zeros((n_rays, stack_size), jnp.int32)  # root pre-pushed
     state0 = (stack0, jnp.ones((n_rays,), jnp.int32),
               jnp.full((n_rays,), jnp.inf, jnp.float32),
               jnp.full((n_rays,), -1, jnp.int32),
               jnp.zeros((n_rays,), jnp.int32), jnp.zeros((n_rays,), jnp.int32),
-              jnp.zeros((n_rays,), bool), jnp.int32(0))
+              jnp.zeros((n_rays,), bool), jnp.zeros((n_rays,), bool),
+              jnp.int32(0))
 
     def cond(state):
-        _, sp, _, _, _, _, done, rounds = state
+        _, sp, _, _, _, _, _, done, rounds = state
         return jnp.any((sp > 0) & ~done) & (rounds < max_rounds)
 
     def body(state):
-        stack, sp, t_best, best_tri, n_qb, n_tri, done, rounds = state
+        stack, sp, t_best, best_tri, n_qb, n_tri, overflow, done, rounds = state
         active = (sp > 0) & ~done
 
         # frontier pop (masked compaction: retired rays contribute no jobs)
@@ -114,17 +119,17 @@ def trace_wavefront(bvh: BVH4, rays, depth: int, ray_type: str = "closest",
         sp = jnp.where(active, sp - 1, sp)
         is_leaf_parent = node >= leaf_parent_offset
 
-        # ---- one batched OpQuadbox job over the whole frontier --------------
-        boxes = child_boxes(bvh, node)  # (R, 4, lo/hi)
+        # ---- one batched box-test job over the whole frontier ---------------
+        boxes = child_boxes(bvh, node, arity)  # (R, arity, lo/hi)
         qb = ray_box_test(rays, boxes)
 
         # ---- batched OpTriangle round for the leaf-parent rays --------------
-        leaf_pos = (4 * node[:, None] + 1 - leaf_offset
-                    + jnp.arange(4, dtype=jnp.int32))
+        leaf_pos = (arity * node[:, None] + 1 - leaf_offset
+                    + jnp.arange(arity, dtype=jnp.int32))
         leaf_pos = jnp.clip(leaf_pos, 0, bvh.leaf_tri.shape[0] - 1)
-        tri_idx = bvh.leaf_tri[leaf_pos]  # (R, 4), -1 = padded leaf
+        tri_idx = bvh.leaf_tri[leaf_pos]  # (R, arity), -1 = padded leaf
         tris = _gather_triangles(bvh.triangles, tri_idx)
-        tr = ray_triangle_test(_tile_ray(rays, 4), tris)
+        tr = ray_triangle_test(_tile_ray(rays, arity), tris)
         t = tr.t_num / tr.t_denom  # external division, as in trace_ray
         valid = (tr.hit & (tri_idx >= 0) & (t < t_best[:, None])
                  & (t <= rays.extent[:, None]) & (t >= t_min))
@@ -137,29 +142,33 @@ def trace_wavefront(bvh: BVH4, rays, depth: int, ray_type: str = "closest",
         if ray_type != "closest":  # any-hit: retire on the first accepted hit
             done = done | leaf_better
 
-        # ---- push hit children far-to-near (quad-sort output order) ---------
+        # ---- push hit children far-to-near (sort-network output order) ------
         def push_child(i, carry):
-            stack, sp = carry
-            slot = 3 - i  # reverse order: farthest first, nearest on top
+            stack, sp, overflow = carry
+            slot = arity - 1 - i  # reverse: farthest first, nearest on top
             ok = (active & ~is_leaf_parent & qb.is_intersect[:, slot]
                   & (qb.tmin[:, slot] < t_best))
-            child = 4 * node + 1 + qb.box_index[:, slot]
-            pos = jnp.minimum(sp, STACK_SIZE - 1)
+            child = arity * node + 1 + qb.box_index[:, slot]
+            can = ok & (sp < stack_size)  # drop-and-flag at capacity
+            overflow = overflow | (ok & (sp >= stack_size))
+            pos = jnp.minimum(sp, stack_size - 1)
             cur = stack[rows, pos]
-            stack = stack.at[rows, pos].set(jnp.where(ok, child, cur))
-            sp = jnp.where(ok, sp + 1, sp)
-            return stack, sp
+            stack = stack.at[rows, pos].set(jnp.where(can, child, cur))
+            sp = jnp.where(can, sp + 1, sp)
+            return stack, sp, overflow
 
-        stack, sp = jax.lax.fori_loop(0, 4, push_child, (stack, sp))
+        stack, sp, overflow = jax.lax.fori_loop(
+            0, arity, push_child, (stack, sp, overflow))
         n_qb = n_qb + active.astype(jnp.int32)
-        n_tri = n_tri + jnp.where(active & is_leaf_parent, 4, 0)
-        return stack, sp, t_best, best_tri, n_qb, n_tri, done, rounds + 1
+        n_tri = n_tri + jnp.where(active & is_leaf_parent, arity, 0)
+        return (stack, sp, t_best, best_tri, n_qb, n_tri, overflow, done,
+                rounds + 1)
 
-    (_, _, t_best, best_tri, n_qb, n_tri, _, rounds) = jax.lax.while_loop(
-        cond, body, state0)
+    (_, _, t_best, best_tri, n_qb, n_tri, overflow, _, rounds
+     ) = jax.lax.while_loop(cond, body, state0)
     return WavefrontRecord(t=t_best, tri_index=best_tri, hit=best_tri >= 0,
                            quadbox_jobs=n_qb, triangle_jobs=n_tri,
-                           rounds=rounds)
+                           stack_overflow=overflow, rounds=rounds)
 
 
 def occlusion_test(bvh: BVH4, rays, depth: int,

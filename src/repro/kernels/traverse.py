@@ -53,7 +53,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from ..core.bvh import BVH4, level_offset
+from ..core.bvh import BVH4, DatapathConfig, level_offset, resolve_config
 from ..core.datapath import point_box_test, ray_box_test, ray_triangle_test
 from ..core.knn import squared_norms
 from ..core.neighbor import (
@@ -93,36 +93,41 @@ def _unpack_ray(op: jax.Array) -> Ray:
 
 
 def _traverse_kernel(ray_ref, nlo_ref, nhi_ref, leaf_ref, tri_ref,
-                     t_ref, tri_out_ref, qb_ref, ntri_ref, rounds_ref, *,
-                     depth: int, ray_type: str, t_min: float,
-                     max_rounds: int, n_leaf: int):
+                     t_ref, tri_out_ref, qb_ref, ntri_ref, ovf_ref,
+                     rounds_ref, *, depth: int, ray_type: str, t_min: float,
+                     max_rounds: int, n_leaf: int, config: DatapathConfig):
     """One tile = 128 rays traversed to completion inside the kernel."""
+    arity, stack_size = config.arity, config.stack_size
     ray = _unpack_ray(ray_ref[...])
-    node_lo = nlo_ref[...]  # (3, num_nodes_pad)
-    node_hi = nhi_ref[...]
+    # (3, num_nodes_pad); bf16/compressed configs store real bf16 rows —
+    # the upcast is lossless (values sit on the bf16 grid by construction),
+    # so results stay bit-identical to the wavefront engine's f32 arrays
+    node_lo = nlo_ref[...].astype(jnp.float32)
+    node_hi = nhi_ref[...].astype(jnp.float32)
     leaf_tri_tab = leaf_ref[0, :]  # (n_leaf_pad,) i32
     tri_rows = tri_ref[...]  # (9, n_tri_pad): rows a.xyz | b.xyz | c.xyz
 
-    leaf_parent_offset = level_offset(depth - 1)
-    leaf_offset = level_offset(depth)
+    leaf_parent_offset = level_offset(depth - 1, arity)
+    leaf_offset = level_offset(depth, arity)
     lanes = jnp.arange(LANES, dtype=jnp.int32)
-    quad = jnp.arange(4, dtype=jnp.int32)
+    quad = jnp.arange(arity, dtype=jnp.int32)
 
-    # lane-private traversal state: stacks are (STACK_SIZE, LANES) columns,
+    # lane-private traversal state: stacks are (stack_size, LANES) columns,
     # everything is while-carry so it never leaves VMEM/VREGs mid-loop
-    stack0 = jnp.zeros((STACK_SIZE, LANES), jnp.int32)  # root pre-pushed
+    stack0 = jnp.zeros((stack_size, LANES), jnp.int32)  # root pre-pushed
     state0 = (stack0, jnp.ones((LANES,), jnp.int32),
               jnp.full((LANES,), jnp.inf, jnp.float32),
               jnp.full((LANES,), -1, jnp.int32),
               jnp.zeros((LANES,), jnp.int32), jnp.zeros((LANES,), jnp.int32),
-              jnp.zeros((LANES,), bool), jnp.int32(0))
+              jnp.zeros((LANES,), bool), jnp.zeros((LANES,), bool),
+              jnp.int32(0))
 
     def cond(state):
-        _, sp, _, _, _, _, done, rounds = state
+        _, sp, _, _, _, _, _, done, rounds = state
         return jnp.any((sp > 0) & ~done) & (rounds < max_rounds)
 
     def body(state):
-        stack, sp, t_best, best_tri, n_qb, n_tri, done, rounds = state
+        stack, sp, t_best, best_tri, n_qb, n_tri, overflow, done, rounds = state
         active = (sp > 0) & ~done
 
         # frontier pop (masked: retired lanes contribute no jobs)
@@ -131,23 +136,23 @@ def _traverse_kernel(ray_ref, nlo_ref, nhi_ref, leaf_ref, tri_ref,
         node = jnp.where(active, top, 0)
         sp = jnp.where(active, sp - 1, sp)
         is_leaf_parent = node >= leaf_parent_offset
-        base = 4 * node + 1
+        base = arity * node + 1
 
-        # ---- OpQuadbox: the popped node's 4 child AABBs, per lane ----------
-        cidx = base[:, None] + quad[None, :]  # (L, 4)
-        lo = jnp.moveaxis(jnp.take(node_lo, cidx, axis=1), 0, -1)  # (L,4,3)
+        # ---- box test: the popped node's `arity` child AABBs, per lane -----
+        cidx = base[:, None] + quad[None, :]  # (L, arity)
+        lo = jnp.moveaxis(jnp.take(node_lo, cidx, axis=1), 0, -1)  # (L,A,3)
         hi = jnp.moveaxis(jnp.take(node_hi, cidx, axis=1), 0, -1)
         qb = ray_box_test(ray, Box(lo=lo, hi=hi))  # shared stage helper
 
         # ---- OpTriangle round for leaf-parent lanes ------------------------
         leaf_pos = base[:, None] - leaf_offset + quad[None, :]
         leaf_pos = jnp.clip(leaf_pos, 0, n_leaf - 1)
-        tri_idx = jnp.take(leaf_tri_tab, leaf_pos)  # (L, 4), -1 = padded
-        tv = jnp.take(tri_rows, jnp.maximum(tri_idx, 0), axis=1)  # (9,L,4)
+        tri_idx = jnp.take(leaf_tri_tab, leaf_pos)  # (L, arity), -1 = padded
+        tv = jnp.take(tri_rows, jnp.maximum(tri_idx, 0), axis=1)  # (9,L,A)
         tris = Triangle(a=jnp.moveaxis(tv[0:3], 0, -1),
                         b=jnp.moveaxis(tv[3:6], 0, -1),
                         c=jnp.moveaxis(tv[6:9], 0, -1))
-        tr = ray_triangle_test(_tile_ray(ray, 4), tris)  # shared stage helper
+        tr = ray_triangle_test(_tile_ray(ray, arity), tris)  # shared helper
         t = tr.t_num / tr.t_denom  # external division, as everywhere
         valid = (tr.hit & (tri_idx >= 0) & (t < t_best[:, None])
                  & (t <= ray.extent[:, None]) & (t >= t_min))
@@ -162,28 +167,32 @@ def _traverse_kernel(ray_ref, nlo_ref, nhi_ref, leaf_ref, tri_ref,
         if ray_type != "closest":  # any-hit: retire on first accepted hit
             done = done | leaf_better
 
-        # ---- push hit children far-to-near (quad-sort output order) --------
-        for i in range(4):
-            slot = 3 - i  # farthest first, nearest ends on top
+        # ---- push hit children far-to-near (sort-network output order) -----
+        for i in range(arity):
+            slot = arity - 1 - i  # farthest first, nearest ends on top
             ok = (active & ~is_leaf_parent & qb.is_intersect[:, slot]
                   & (qb.tmin[:, slot] < t_best))
             child = base + qb.box_index[:, slot]
-            pos = jnp.minimum(sp, STACK_SIZE - 1)
+            can = ok & (sp < stack_size)  # drop-and-flag at capacity
+            overflow = overflow | (ok & (sp >= stack_size))
+            pos = jnp.minimum(sp, stack_size - 1)
             cur = jnp.take_along_axis(stack, pos[None, :], axis=0)[0]
-            stack = stack.at[pos, lanes].set(jnp.where(ok, child, cur))
-            sp = jnp.where(ok, sp + 1, sp)
+            stack = stack.at[pos, lanes].set(jnp.where(can, child, cur))
+            sp = jnp.where(can, sp + 1, sp)
 
         n_qb = n_qb + active.astype(jnp.int32)
-        n_tri = n_tri + jnp.where(active & is_leaf_parent, 4, 0)
-        return stack, sp, t_best, best_tri, n_qb, n_tri, done, rounds + 1
+        n_tri = n_tri + jnp.where(active & is_leaf_parent, arity, 0)
+        return (stack, sp, t_best, best_tri, n_qb, n_tri, overflow, done,
+                rounds + 1)
 
-    (_, _, t_best, best_tri, n_qb, n_tri, _, rounds) = jax.lax.while_loop(
-        cond, body, state0)
+    (_, _, t_best, best_tri, n_qb, n_tri, overflow, _, rounds
+     ) = jax.lax.while_loop(cond, body, state0)
 
     t_ref[0, :] = t_best
     tri_out_ref[0, :] = best_tri
     qb_ref[0, :] = n_qb
     ntri_ref[0, :] = n_tri
+    ovf_ref[0, :] = overflow.astype(jnp.int32)
     rounds_ref[0, :] = jnp.full((LANES,), rounds, jnp.int32)
 
 
@@ -210,15 +219,22 @@ def pack_rays(rays: Ray, n_pad: int) -> jax.Array:
     return _pad_cols_repeat(op, n_pad)
 
 
-def pack_bvh(bvh: BVH4):
-    """BVH4 -> the kernel's resident operands (node boxes transposed to
+def pack_bvh(bvh: BVH4, config: DatapathConfig | None = None):
+    """BVH -> the kernel's resident operands (node boxes transposed to
     rows-by-nodes, leaf table, triangle soup as 9 vertex rows), each
     column-padded to a lane multiple.  Padded node columns carry inverted
-    boxes (can never intersect); padded leaf slots carry -1."""
+    boxes (can never intersect); padded leaf slots carry -1.
+
+    Reduced-precision configs pack the node rows as genuine bf16 — the
+    build-side codec already snapped every box to the bf16 grid, so the
+    cast is lossless and the kernel's upcast recovers the wavefront
+    engine's exact f32 values while halving resident node bytes."""
+    config = resolve_config(config)
     n_nodes = bvh.node_lo.shape[0]
     nodes_pad = ceil_to(n_nodes, LANES)
-    nlo = pad_cols(bvh.node_lo.T, nodes_pad, jnp.inf)
-    nhi = pad_cols(bvh.node_hi.T, nodes_pad, -jnp.inf)
+    box_dtype = config.packed_box_dtype
+    nlo = pad_cols(bvh.node_lo.T, nodes_pad, jnp.inf).astype(box_dtype)
+    nhi = pad_cols(bvh.node_hi.T, nodes_pad, -jnp.inf).astype(box_dtype)
     leaf_pad = ceil_to(bvh.leaf_tri.shape[0], LANES)
     leaf = pad_cols(bvh.leaf_tri[None, :].astype(jnp.int32), leaf_pad, -1)
     tri_pad = ceil_to(bvh.triangles.a.shape[0], LANES)
@@ -229,11 +245,13 @@ def pack_bvh(bvh: BVH4):
 
 
 @functools.partial(jax.jit, static_argnames=("depth", "ray_type", "t_min",
-                                             "max_rounds", "interpret"))
+                                             "max_rounds", "interpret",
+                                             "config"))
 def traverse_packed(packed, rays: Ray, depth: int, *,
                     ray_type: str = "closest", t_min: float | None = None,
                     max_rounds: int | None = None,
-                    interpret: bool | None = None) -> WavefrontRecord:
+                    interpret: bool | None = None,
+                    config: DatapathConfig | None = None) -> WavefrontRecord:
     """:func:`traverse_fused` on pre-packed BVH operands.
 
     ``packed`` is :func:`pack_bvh`'s output — the session engine prepares
@@ -244,10 +262,12 @@ def traverse_packed(packed, rays: Ray, depth: int, *,
     if ray_type not in RAY_TYPES:
         raise ValueError(
             f"ray_type must be one of {RAY_TYPES}, got {ray_type!r}")
+    config = resolve_config(config)
     if t_min is None:
         t_min = SHADOW_T_MIN if ray_type == "shadow" else 0.0
     if max_rounds is None:
-        max_rounds = level_offset(depth)  # exact bound: one pop per node
+        # exact bound: one pop per node
+        max_rounds = level_offset(depth, config.arity)
     interpret = resolve_interpret(interpret)
 
     n = rays.origin.shape[0]
@@ -255,17 +275,19 @@ def traverse_packed(packed, rays: Ray, depth: int, *,
         z = jnp.zeros((0,), jnp.int32)
         return WavefrontRecord(t=jnp.zeros((0,), jnp.float32), tri_index=z,
                                hit=jnp.zeros((0,), bool), quadbox_jobs=z,
-                               triangle_jobs=z, rounds=jnp.int32(0))
+                               triangle_jobs=z,
+                               stack_overflow=jnp.zeros((0,), bool),
+                               rounds=jnp.int32(0))
     n_pad = ceil_to(n, LANES)
     ray_op = pack_rays(rays, n_pad)
     nlo, nhi, leaf, tri_rows = packed
-    n_leaf = 4 ** depth  # true (pre-padding) leaf count
+    n_leaf = config.arity ** depth  # true (pre-padding) leaf count
 
     kernel = functools.partial(
         _traverse_kernel, depth=depth, ray_type=ray_type, t_min=float(t_min),
-        max_rounds=int(max_rounds), n_leaf=n_leaf)
+        max_rounds=int(max_rounds), n_leaf=n_leaf, config=config)
     whole = lambda shape: pl.BlockSpec(shape, lambda t: (0, 0))  # noqa: E731
-    out_t, out_tri, out_qb, out_ntri, out_rounds = pl.pallas_call(
+    out_t, out_tri, out_qb, out_ntri, out_ovf, out_rounds = pl.pallas_call(
         kernel,
         grid=(n_pad // LANES,),
         in_specs=[
@@ -281,9 +303,11 @@ def traverse_packed(packed, rays: Ray, depth: int, *,
             pl.BlockSpec((1, LANES), lambda t: (0, t)),
             pl.BlockSpec((1, LANES), lambda t: (0, t)),
             pl.BlockSpec((1, LANES), lambda t: (0, t)),
+            pl.BlockSpec((1, LANES), lambda t: (0, t)),
         ),
         out_shape=(
             jax.ShapeDtypeStruct((1, n_pad), jnp.float32),
+            jax.ShapeDtypeStruct((1, n_pad), jnp.int32),
             jax.ShapeDtypeStruct((1, n_pad), jnp.int32),
             jax.ShapeDtypeStruct((1, n_pad), jnp.int32),
             jax.ShapeDtypeStruct((1, n_pad), jnp.int32),
@@ -300,6 +324,7 @@ def traverse_packed(packed, rays: Ray, depth: int, *,
                            hit=best_tri >= 0,
                            quadbox_jobs=out_qb[0, :n],
                            triangle_jobs=out_ntri[0, :n],
+                           stack_overflow=out_ovf[0, :n] > 0,
                            rounds=jnp.max(out_rounds))
 
 
@@ -526,7 +551,8 @@ def neighbor_fused(bvh: BVH4, queries: Ray, depth: int, k: int, *,
 def traverse_fused(bvh: BVH4, rays: Ray, depth: int, *,
                    ray_type: str = "closest", t_min: float | None = None,
                    max_rounds: int | None = None,
-                   interpret: bool | None = None) -> WavefrontRecord:
+                   interpret: bool | None = None,
+                   config: DatapathConfig | None = None) -> WavefrontRecord:
     """Traverse a ray batch with the whole round loop inside one kernel.
 
     Same contract as :func:`repro.core.wavefront.trace_wavefront` (whose
@@ -541,6 +567,8 @@ def traverse_fused(bvh: BVH4, rays: Ray, depth: int, *,
     :func:`pack_bvh` once per scene version and calls
     :func:`traverse_packed`.
     """
-    return traverse_packed(pack_bvh(bvh), rays, depth, ray_type=ray_type,
-                           t_min=t_min, max_rounds=max_rounds,
-                           interpret=interpret)
+    config = resolve_config(config)
+    return traverse_packed(pack_bvh(bvh, config), rays, depth,
+                           ray_type=ray_type, t_min=t_min,
+                           max_rounds=max_rounds, interpret=interpret,
+                           config=config)

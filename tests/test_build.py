@@ -415,3 +415,36 @@ def test_sah_beats_lbvh_on_clustered_scene():
         stats["sah"].sah_cost)
     assert tree_stats(build(tri, "lbvh").bvh, "lbvh",
                       rays=rays).mean_jobs == stats["lbvh"].mean_jobs
+
+
+def test_scene_stats_config_fields_pinned():
+    """`Scene.stats()` carries the per-config fields the sweep harness
+    depends on: arity, bytes/node, compression ratio and the measured
+    mean branching factor — with exactly the pinned values for each
+    datapath twin (schema drift here breaks `bench_sweep.py` rows)."""
+    from repro.core.bvh import DatapathConfig
+
+    rng = np.random.default_rng(53)
+    tri = _soup(rng, 230)
+
+    st4 = Scene.from_triangles(tri, builder="lbvh").stats()
+    assert st4.arity == 4
+    assert st4.bytes_per_node == 24  # 2 corners x 3 f32
+    assert st4.compression_ratio == pytest.approx(1.0)
+    assert 1.0 <= st4.mean_branching_factor <= 4.0
+
+    cfg8 = DatapathConfig(arity=8, precision="bf16",
+                          node_format="compressed")
+    st8 = Scene.from_triangles(tri, builder="lbvh", config=cfg8).stats()
+    assert st8.arity == 8
+    assert st8.bytes_per_node == 6  # u8 grid + bf16 anchors, amortized
+    assert st8.compression_ratio == pytest.approx(4.0)
+    assert 1.0 <= st8.mean_branching_factor <= 8.0
+    # a complete 8-ary tree of the same soup is shallower, not smaller
+    assert st8.depth < st4.depth
+    assert st8.n_leaves >= st4.n_triangles
+
+    # field NAMES are part of the schema: bench rows index by keyword
+    for f in ("arity", "bytes_per_node", "compression_ratio",
+              "mean_branching_factor"):
+        assert f in type(st4)._fields

@@ -35,8 +35,11 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 from repro.api import PointCloudScene, Scene, VectorIndex, make_ray
 from repro.core import (Triangle, knn, radius_count, radius_search,
                         trace_rays, trace_wavefront)
+from repro.core.bvh import DatapathConfig
+from repro.core.build import build
 
-TRACE_FIELDS = ("t", "tri_index", "hit", "quadbox_jobs", "triangle_jobs")
+TRACE_FIELDS = ("t", "tri_index", "hit", "quadbox_jobs", "triangle_jobs",
+                "stack_overflow")
 
 # small seeded domains so engines/BVHs cache across hypothesis examples
 N_TRI = (1, 3, 17, 230)  # single-triangle, root-is-leaf-parent, mid, deep
@@ -133,6 +136,107 @@ def test_fuzz_trace_backends_bitmatch_oracles(scene_seed, n_tri, builder,
                 err_msg=f"{name}: {f}")
         if "per_ray" not in name:
             assert int(got.rounds) == int(ref.rounds), name
+
+
+# ---------------------------------------------------------------------------
+# datapath config twins: every (arity, stack, precision, codec) draw vs
+# the BVH4-fp32 oracle
+# ---------------------------------------------------------------------------
+
+# drawn as strategy components so hypothesis explores the grid while the
+# per-(config, builder) scenes/engines cache across examples
+CONFIG_ARITIES = (4, 8)
+CONFIG_STACKS = (16, 64)
+CONFIG_CODECS = (("fp32", "fp32"), ("bf16", "fp32"), ("bf16", "compressed"))
+
+_config_scenes: dict = {}
+
+
+def _config_scene(seed, n_tri, builder, config):
+    key = (seed, n_tri, builder, config)
+    if key not in _config_scenes:
+        rng = np.random.default_rng(1000 * seed + n_tri)
+        ctr = rng.uniform(-1, 1, (n_tri, 3)).astype(np.float32)
+        d1 = rng.normal(scale=0.2, size=(n_tri, 3)).astype(np.float32)
+        d2 = rng.normal(scale=0.2, size=(n_tri, 3)).astype(np.float32)
+        tri = Triangle(jnp.asarray(ctr), jnp.asarray(ctr + d1),
+                       jnp.asarray(ctr + d2))
+        scene = Scene.from_triangles(tri, builder=builder, config=config)
+        _config_scenes[key] = (scene, scene.engine(pad_multiple=8, shard=1))
+    return _config_scenes[key]
+
+
+@given(scene_seed=st.sampled_from(SCENE_SEEDS[:2]),
+       n_tri=st.sampled_from((17, 230)),
+       builder=st.sampled_from(BUILDERS),
+       arity=st.sampled_from(CONFIG_ARITIES),
+       stack_size=st.sampled_from(CONFIG_STACKS),
+       codec=st.sampled_from(CONFIG_CODECS),
+       ray_seed=st.integers(0, 2**31 - 1),
+       n_rays=st.integers(1, 24),
+       ray_type=st.sampled_from(["closest", "any", "shadow"]))
+@settings(max_examples=30, deadline=None)
+def test_fuzz_datapath_configs_honor_contracts(scene_seed, n_tri, builder,
+                                               arity, stack_size, codec,
+                                               ray_seed, n_rays, ray_type):
+    """Every drawn :class:`DatapathConfig` twin honors its contract:
+
+    * wavefront and fused-Pallas engines bit-match on EVERY field under
+      every config (cross-engine parity is structural, not fp32-only);
+    * closest-hit ``t``/``tri_index``/``hit`` bit-match the default
+      BVH4-fp32 wavefront oracle — the conservative codecs only widen
+      boxes, and triangle tests stay exact f32, so reduced precision can
+      add visited nodes but never change the committed hit;
+    * any/shadow ``hit`` flags agree with the oracle (the accepted ``t``
+      of an any-hit may legitimately differ — first hit found wins);
+    * job counters are a superset (>=) of the SAME builder+arity's exact
+      fp32 twin — the conservative-interval cost is measurable, ordered
+      and never negative.
+    """
+    precision, node_format = codec
+    config = DatapathConfig(arity=arity, stack_size=stack_size,
+                            precision=precision, node_format=node_format)
+    scene, engine = _config_scene(scene_seed, n_tri, builder, config)
+    rays = _rays(np.random.default_rng(ray_seed), n_rays)
+
+    ref = trace_wavefront(scene.bvh, rays, scene.depth, ray_type=ray_type,
+                          config=config)
+    got = engine.trace(rays, ray_type=ray_type, backend="pallas")
+    for f in TRACE_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, f)), np.asarray(getattr(ref, f)),
+            err_msg=f"pallas vs wavefront under {config.tag}: {f}")
+    assert int(got.rounds) == int(ref.rounds), config.tag
+    if ray_type == "closest":
+        oracle = trace_rays(scene.bvh, rays, scene.depth, config)
+        for f in TRACE_FIELDS:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(ref, f)), np.asarray(getattr(oracle, f)),
+                err_msg=f"wavefront vs per-ray under {config.tag}: {f}")
+
+    # --- contracts vs the default BVH4-fp32 oracle scene -------------------
+    base_scene, _ = _scene(scene_seed, n_tri, builder)[:2]
+    base = trace_wavefront(base_scene.bvh, rays, base_scene.depth,
+                           ray_type=ray_type)
+    np.testing.assert_array_equal(np.asarray(ref.hit), np.asarray(base.hit),
+                                  err_msg=f"{config.tag}: hit flags")
+    if ray_type == "closest":
+        for f in ("t", "tri_index"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(ref, f)), np.asarray(getattr(base, f)),
+                err_msg=f"{config.tag}: closest-hit {f} vs BVH4-fp32 oracle")
+
+    # --- superset contract: vs the exact-precision twin of the SAME tree --
+    if not config.exact_boxes:
+        exact = DatapathConfig(arity=arity, stack_size=stack_size)
+        exact_scene, _ = _config_scene(scene_seed, n_tri, builder, exact)
+        ex = trace_wavefront(exact_scene.bvh, rays, exact_scene.depth,
+                             ray_type=ray_type)
+        if ray_type == "closest":  # any-hit walks stop at different nodes
+            assert np.all(np.asarray(ref.quadbox_jobs)
+                          >= np.asarray(ex.quadbox_jobs)), config.tag
+            assert np.all(np.asarray(ref.triangle_jobs)
+                          >= np.asarray(ex.triangle_jobs)), config.tag
 
 
 # ---------------------------------------------------------------------------

@@ -8,9 +8,13 @@ suite pins every registered trace backend × ray type × builder against
 hit records and job counters serialized at a known-good commit:
 
 * ``tests/golden/<scene>.npz`` holds a small canonical scene (triangle
-  soup + deterministic ray batch) and, per (builder, ray_type), the
-  expected ``t`` / ``tri_index`` / ``hit`` / ``quadbox_jobs`` /
-  ``triangle_jobs`` / ``rounds`` produced by the wavefront oracle.
+  soup + deterministic ray batch) and, per (config, builder, ray_type),
+  the expected ``t`` / ``tri_index`` / ``hit`` / ``quadbox_jobs`` /
+  ``triangle_jobs`` / ``stack_overflow`` / ``rounds`` produced by the
+  wavefront oracle.  The pinned config set spans the datapath twins:
+  the BVH4-fp32 default, BVH8-fp32 (arity), and BVH4-compressed (the
+  quantized node codec) — so codec or sort-network drift is caught even
+  when both engines move together.
 * The test traces the stored rays through the session engine with every
   registered backend and bit-compares everything.
 
@@ -31,13 +35,20 @@ import pytest
 
 from repro.api import Scene, make_ray, trace_backends
 from repro.core import Triangle
+from repro.core.bvh import DatapathConfig
 from repro.core.session import trace_backend_ray_types
 from repro.core.wavefront import RAY_TYPES, trace_wavefront
 
 GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
 BUILDERS = ("lbvh", "sah")
-FIELDS = ("t", "tri_index", "hit", "quadbox_jobs", "triangle_jobs")
+FIELDS = ("t", "tri_index", "hit", "quadbox_jobs", "triangle_jobs",
+          "stack_overflow")
 SCENES = ("tetra", "sheet", "cluster")
+#: pinned datapath twins: default, the wide-arity twin, the quantized
+#: node codec twin (each key is the config's ``tag``)
+CONFIGS = (DatapathConfig(),
+           DatapathConfig(arity=8),
+           DatapathConfig(precision="bf16", node_format="compressed"))
 
 
 # ---------------------------------------------------------------------------
@@ -101,24 +112,29 @@ def _generate(name: str) -> dict:
                     extent=jnp.asarray(extent))
     data = {"tris": tris, "ray_org": org, "ray_dir": dirs,
             "ray_extent": extent}
-    for builder in BUILDERS:
-        scene = Scene.from_triangles(
-            Triangle(jnp.asarray(tris[:, 0]), jnp.asarray(tris[:, 1]),
-                     jnp.asarray(tris[:, 2])), builder=builder)
-        for ray_type in RAY_TYPES:
-            rec = trace_wavefront(scene.bvh, rays, scene.depth,
-                                  ray_type=ray_type)
-            for f in FIELDS:
-                data[f"{builder}__{ray_type}__{f}"] = np.asarray(
-                    getattr(rec, f))
-            data[f"{builder}__{ray_type}__rounds"] = np.asarray(rec.rounds)
+    for config in CONFIGS:
+        for builder in BUILDERS:
+            scene = Scene.from_triangles(
+                Triangle(jnp.asarray(tris[:, 0]), jnp.asarray(tris[:, 1]),
+                         jnp.asarray(tris[:, 2])), builder=builder,
+                config=config)
+            for ray_type in RAY_TYPES:
+                rec = trace_wavefront(scene.bvh, rays, scene.depth,
+                                      ray_type=ray_type, config=config)
+                stem = f"{config.tag}__{builder}__{ray_type}"
+                for f in FIELDS:
+                    data[f"{stem}__{f}"] = np.asarray(getattr(rec, f))
+                data[f"{stem}__rounds"] = np.asarray(rec.rounds)
     return data
 
 
+@pytest.mark.parametrize("config", CONFIGS, ids=lambda c: c.tag)
 @pytest.mark.parametrize("scene_name", SCENES)
-def test_golden_traces(scene_name, regen_goldens):
+def test_golden_traces(scene_name, config, regen_goldens):
     path = _golden_path(scene_name)
     if regen_goldens:
+        if config is not CONFIGS[0]:
+            pytest.skip("fixture regenerated once, for all configs")
         os.makedirs(GOLDEN_DIR, exist_ok=True)
         np.savez_compressed(path, **_generate(scene_name))
     if not os.path.exists(path):
@@ -133,12 +149,13 @@ def test_golden_traces(scene_name, regen_goldens):
     for builder in BUILDERS:
         scene = Scene.from_triangles(
             Triangle(jnp.asarray(tris[:, 0]), jnp.asarray(tris[:, 1]),
-                     jnp.asarray(tris[:, 2])), builder=builder)
+                     jnp.asarray(tris[:, 2])), builder=builder,
+            config=config)
         engine = scene.engine(pad_multiple=8, shard=1)
         for ray_type in RAY_TYPES:
-            expected = {f: data[f"{builder}__{ray_type}__{f}"]
-                        for f in FIELDS}
-            exp_rounds = int(data[f"{builder}__{ray_type}__rounds"])
+            stem = f"{config.tag}__{builder}__{ray_type}"
+            expected = {f: data[f"{stem}__{f}"] for f in FIELDS}
+            exp_rounds = int(data[f"{stem}__rounds"])
             for backend in trace_backends():
                 if ray_type not in trace_backend_ray_types(backend):
                     continue
@@ -146,11 +163,11 @@ def test_golden_traces(scene_name, regen_goldens):
                 for f in FIELDS:
                     np.testing.assert_array_equal(
                         np.asarray(getattr(got, f)), expected[f],
-                        err_msg=(f"golden drift: {scene_name}/{builder}/"
-                                 f"{ray_type}/{backend}: {f}"))
+                        err_msg=(f"golden drift: {scene_name}/{config.tag}/"
+                                 f"{builder}/{ray_type}/{backend}: {f}"))
                 assert int(got.rounds) == exp_rounds, (
-                    f"golden drift: {scene_name}/{builder}/{ray_type}/"
-                    f"{backend}: rounds")
+                    f"golden drift: {scene_name}/{config.tag}/{builder}/"
+                    f"{ray_type}/{backend}: rounds")
 
 
 def test_golden_fixtures_self_describing():

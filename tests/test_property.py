@@ -227,3 +227,38 @@ def test_shadow_implies_any_hit_monotone_in_extent(
                                       backend=backend).hit)
     assert not (shadow & ~any_near).any(), "shadow hit without any-hit"
     assert not (any_near & ~any_far).any(), "any-hit lost at larger extent"
+
+
+@given(seed=st.sampled_from(SCENE_SEEDS), n_tri=st.sampled_from(N_TRI),
+       builder=st.sampled_from(BUILDERS),
+       backend=st.sampled_from(TRACE_BACKENDS),
+       ray_seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_bvh8_closest_hit_bitmatches_bvh4(seed, n_tri, builder, backend,
+                                          ray_seed):
+    """The arity is pure scheduling: a BVH8 twin of the same soup commits
+    the identical closest hit as the BVH4 tree — ``t`` bit-equal for fp32
+    configs (both arities visit supersets of the same exact triangle
+    tests, and the committed minimum is over the same candidate set)."""
+    from repro.core.bvh import DatapathConfig
+
+    verts = _soup(seed, n_tri)
+    e4 = _engine(("arity4", seed, n_tri, builder), verts, builder)
+    if ("arity8", seed, n_tri, builder) not in _scenes:
+        scene8 = Scene.from_triangles(
+            Triangle(jnp.asarray(verts[:, 0]), jnp.asarray(verts[:, 1]),
+                     jnp.asarray(verts[:, 2])), builder=builder,
+            config=DatapathConfig(arity=8))
+        _scenes[("arity8", seed, n_tri, builder)] = scene8.engine(
+            pad_multiple=8, shard=1)
+    e8 = _scenes[("arity8", seed, n_tri, builder)]
+    rng = np.random.default_rng(ray_seed)
+    org = rng.uniform(-3, -2, (16, 3)).astype(np.float32)
+    tgt = rng.uniform(-0.6, 0.6, (16, 3)).astype(np.float32)
+    rays = make_ray(jnp.asarray(org), jnp.asarray(tgt - org))
+    r4 = e4.trace(rays, backend=backend)
+    r8 = e8.trace(rays, backend=backend)
+    np.testing.assert_array_equal(np.asarray(r8.hit), np.asarray(r4.hit))
+    np.testing.assert_array_equal(np.asarray(r8.t), np.asarray(r4.t))
+    np.testing.assert_array_equal(np.asarray(r8.tri_index),
+                                  np.asarray(r4.tri_index))

@@ -197,3 +197,48 @@ def test_empty_frontier_early_exit():
     assert int(rec.rounds) == 1  # root popped once, frontier empty
     np.testing.assert_array_equal(np.asarray(rec.quadbox_jobs),
                                   np.ones(8, np.int32))
+
+
+# ---------------------------------------------------------------------------
+# Stack-overflow safety (DatapathConfig.stack_size)
+# ---------------------------------------------------------------------------
+
+
+def test_tiny_stack_flags_overflow_identically():
+    """Pushing past a tiny stack must *drop the push and raise the per-ray
+    ``stack_overflow`` flag* — never silently clobber a slot — and every
+    engine must implement the identical drop-and-flag semantics, so the
+    wavefront record stays bit-equal to the per-ray oracle even while
+    overflowing.  (Regression: overflow used to overwrite the top stack
+    slot with no signal at all.)"""
+    from repro.core.bvh import DatapathConfig
+    from repro.core.build import build
+
+    rng = np.random.default_rng(23)
+    tri = _soup(rng, 230)
+    cfg = DatapathConfig(stack_size=2)  # depth-4 tree: guaranteed too small
+    res = build(tri, "lbvh", config=cfg)
+    rays = _rays(rng, 64)
+
+    ref = trace_rays(res.bvh, rays, res.depth, cfg)
+    got = trace_wavefront(res.bvh, rays, res.depth, config=cfg)
+    ovf = np.asarray(got.stack_overflow)
+    assert ovf.dtype == np.bool_ and ovf.shape == (64,)
+    assert ovf.any(), "deep scene with stack_size=2 must overflow"
+    for f in ("t", "tri_index", "hit", "quadbox_jobs", "triangle_jobs",
+              "stack_overflow"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, f)), np.asarray(getattr(ref, f)),
+            err_msg=f"overflowing engines disagree: {f}")
+
+    # overflowing rays degrade gracefully: any hit they do report is a real
+    # intersection, so it can never undercut the brute-force closest t
+    t_ref, _, _ = brute_force(tri, rays)
+    hit = np.asarray(got.hit)
+    assert np.all(np.isfinite(t_ref[hit]))
+    assert np.all(np.asarray(got.t)[hit] >= t_ref[hit] * (1 - 1e-6))
+
+    # the default config never comes near capacity on this scene: no flag,
+    # and the full (unflagged) result set is the brute-force one
+    full = trace_wavefront(res.bvh, rays, res.depth)
+    assert not np.asarray(full.stack_overflow).any()
